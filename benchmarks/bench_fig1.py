@@ -1,0 +1,22 @@
+"""Paper Fig. 1 proxy: training time vs optimizer-memory frontier per
+method. Time = measured steady-state step wall-clock; memory = the paper's
+deterministic 3.3 model (2*P*B device-resident moments)."""
+from __future__ import annotations
+
+from benchmarks.common import run_method
+
+ROWS = [
+    ("adagradselect_10", dict(method="adagradselect", k_percent=10)),
+    ("adagradselect_30", dict(method="adagradselect", k_percent=30)),
+    ("lora_r8", dict(method="lora", lora_rank=8)),
+    ("full_ft", dict(method="all")),
+]
+
+
+def run(steps: int = 80):
+    out = []
+    for name, kw in ROWS:
+        r = run_method(steps=steps, eval_problems=8, **kw)
+        out.append((f"fig1/{name}", r.step_time_us,
+                    f"opt_bytes={r.opt_bytes_modeled}"))
+    return out

@@ -1,0 +1,17 @@
+"""Paper Fig. 3 proxy: accuracy vs %-of-blocks-selected sweep (gradient-
+guided selection, Alg. 1)."""
+from __future__ import annotations
+
+from benchmarks.common import run_method
+
+KS = (10, 20, 30, 50, 75, 100)
+
+
+def run(steps: int = 150):
+    out = []
+    for k in KS:
+        method = "all" if k == 100 else "topk_grad"
+        r = run_method(method=method, k_percent=k, steps=steps)
+        out.append((f"fig3/k{k}", r.step_time_us,
+                    f"acc={r.accuracy:.3f};loss={r.final_loss:.4f}"))
+    return out

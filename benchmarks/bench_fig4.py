@@ -1,0 +1,30 @@
+"""Paper Fig. 4 proxy: loss-convergence curves for AdaGradSelect (10-30%),
+LoRA, full FT. Full curves land in results/fig4_curves.json; the CSV rows
+carry the final loss."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import run_method
+
+ROWS = [
+    ("adagradselect_10", dict(method="adagradselect", k_percent=10)),
+    ("adagradselect_20", dict(method="adagradselect", k_percent=20)),
+    ("adagradselect_30", dict(method="adagradselect", k_percent=30)),
+    ("lora_r8", dict(method="lora", lora_rank=8)),
+    ("full_ft", dict(method="all")),
+]
+
+
+def run(steps: int = 150, out_dir: str = "results"):
+    os.makedirs(out_dir, exist_ok=True)
+    curves = {}
+    out = []
+    for name, kw in ROWS:
+        r = run_method(steps=steps, eval_problems=8, **kw)
+        curves[name] = r.losses
+        out.append((f"fig4/{name}", r.step_time_us, f"loss={r.final_loss:.4f}"))
+    with open(os.path.join(out_dir, "fig4_curves.json"), "w") as f:
+        json.dump(curves, f)
+    return out

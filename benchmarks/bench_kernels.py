@@ -1,0 +1,65 @@
+"""Kernel micro-benches.
+
+On this CPU container the Pallas kernels execute in interpret mode (Python),
+so wall-clock timing there is meaningless; we time the COMPILED jnp oracle
+path (what the XLA baseline does on-chip) and report the kernel's HBM-bytes
+model as ``derived`` — the quantity the fused kernel actually optimizes.
+Kernel-vs-oracle allclose is enforced in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _time(fn, *args, iters=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    out = []
+    key = jax.random.PRNGKey(0)
+
+    # block_grad_norm: one pass over grads
+    g = jax.random.normal(key, (16, 1 << 18), jnp.float32)
+    f = jax.jit(ref.block_grad_sq_norms)
+    out.append(("kernels/block_grad_norm", _time(f, g),
+                f"hbm_bytes={g.size * 4}"))
+
+    # masked adamw: 5 reads + 3 writes per param
+    p = jax.random.normal(key, (16, 1 << 16), jnp.float32)
+    args = (p, p * 0.1, p * 0.01, jnp.abs(p) * 0.01,
+            jnp.ones(16), jnp.ones(16), 1e-3, 0.9, 0.999, 1e-8, 0.01)
+    f = jax.jit(lambda *a: ref.masked_adamw(*a))
+    out.append(("kernels/masked_adamw", _time(f, *args),
+                f"hbm_bytes={p.size * 4 * 8}"))
+
+    # flash attention fwd
+    q = jax.random.normal(key, (1, 4, 1024, 64), jnp.float32) * 0.5
+    f = jax.jit(lambda q: ref.flash_attention(q, q, q))
+    out.append(("kernels/flash_attention_1k", _time(f, q),
+                f"flops={2 * 2 * 4 * 1024 * 1024 * 64}"))
+
+    # decode attention over a 32k cache
+    kc = jax.random.normal(key, (1, 4, 32768, 64), jnp.float32) * 0.5
+    qd = jax.random.normal(key, (1, 4, 64), jnp.float32)
+    f = jax.jit(lambda q, k: ref.decode_attention(q, k, k, 32768))
+    out.append(("kernels/decode_attention_32k", _time(f, qd, kc),
+                f"hbm_bytes={2 * kc.size * 4}"))
+
+    # rmsnorm
+    x = jax.random.normal(key, (4096, 2048), jnp.bfloat16)
+    sc = jnp.ones((2048,), jnp.bfloat16)
+    f = jax.jit(lambda x, s: ref.rmsnorm(x, s))
+    out.append(("kernels/rmsnorm", _time(f, x, sc),
+                f"hbm_bytes={x.size * 2 * 2}"))
+    return out

@@ -1,0 +1,24 @@
+"""Paper Table 1 proxy: AdaGradSelect (10/20/30%) vs LoRA (2 ranks) vs full
+fine-tuning — accuracy on the held-out synthetic-math eval (GSM8K-protocol:
+zero-shot greedy decoding, exact match)."""
+from __future__ import annotations
+
+from benchmarks.common import run_method
+
+ROWS = [
+    ("adagradselect_10", dict(method="adagradselect", k_percent=10)),
+    ("adagradselect_20", dict(method="adagradselect", k_percent=20)),
+    ("adagradselect_30", dict(method="adagradselect", k_percent=30)),
+    ("lora_r4", dict(method="lora", lora_rank=4)),
+    ("lora_r8", dict(method="lora", lora_rank=8)),
+    ("full_ft", dict(method="all")),
+]
+
+
+def run(steps: int = 150):
+    out = []
+    for name, kw in ROWS:
+        r = run_method(steps=steps, **kw)
+        out.append((f"table1/{name}", r.step_time_us,
+                    f"acc={r.accuracy:.3f};loss={r.final_loss:.4f}"))
+    return out

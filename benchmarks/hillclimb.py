@@ -1,0 +1,55 @@
+"""Perf-iteration driver: relower a hillclimb cell with a named variant and
+record the roofline delta (EXPERIMENTS.md §Perf evidence).
+
+  PYTHONPATH=src python -m benchmarks.hillclimb <cell> <variant>
+
+Cells:    llama | chatglm | deepseek
+Variants: baseline | kvshard | kvshard_dots | gather_ep | bf16mom |
+          bf16mom_mb16 | dots
+"""
+import json
+import os
+import sys
+
+
+def main():
+    cell, variant = sys.argv[1], sys.argv[2]
+    arch, shape = {
+        "llama": ("llama3.2-1b", "train_4k"),
+        "chatglm": ("chatglm3-6b", "train_4k"),
+        "deepseek": ("deepseek-v3-671b", "train_4k"),
+    }[cell]
+
+    from repro.configs import get_config
+    from repro.launch.dryrun import run_cell
+
+    cfg = get_config(arch)
+    kw = {}
+    if "kvshard" in variant:
+        cfg = cfg.replace(seq_shard_kv=True)
+    if "dots" in variant:
+        cfg = cfg.replace(remat="dots")
+    if "bf16mom" in variant:
+        kw["moment_dtype"] = "bfloat16"
+    if "mb16" in variant:
+        kw["microbatch"] = 16
+    # "gather_ep" / "baseline": code state as-is
+
+    r = run_cell(arch, shape, "single", cfg_override=cfg,
+                 hlo_dir="results/perf/hlo", **kw)
+    os.makedirs("results/perf", exist_ok=True)
+    with open(f"results/perf/{cell}_{variant}.json", "w") as f:
+        json.dump(r, f, indent=2)
+    if r["status"] == "ok":
+        rf = r["roofline"]
+        print(f"{cell}/{variant}: compute={rf['compute_s']:.2f}s "
+              f"memory={rf['memory_s']:.2f}s coll={rf['collective_s']:.2f}s "
+              f"peak={r['memory']['peak_per_device']/2**30:.1f}GiB "
+              f"useful={rf['useful_flops_frac']:.2f}")
+    else:
+        print(r["error"])
+        print(r["traceback"][-800:])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Aggregate dry-run JSONs into the roofline table (EXPERIMENTS.md source).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_table [results_dir]
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(results_dir: str = "results"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "dryrun_*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_ms(s):
+    return f"{s * 1e3:9.2f}"
+
+
+def table(rows, mesh: str = "single"):
+    out = []
+    hdr = (f"{'arch':22s} {'shape':12s} {'compute_ms':>10s} {'memory_ms':>10s} "
+           f"{'coll_ms':>9s} {'bound':>10s} {'useful%':>8s} {'peak_GiB':>9s} "
+           f"{'status':>7s}")
+    out.append(hdr)
+    out.append("-" * len(hdr))
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] != "ok":
+            out.append(f"{r['arch']:22s} {r['shape']:12s} {'':>42s} "
+                       f"{'':>8s} {'':>9s}  ERROR")
+            continue
+        rf = r["roofline"]
+        peak = r["memory"]["peak_per_device"] / (1 << 30)
+        out.append(
+            f"{r['arch']:22s} {r['shape']:12s} {fmt_ms(rf['compute_s']):>10s} "
+            f"{fmt_ms(rf['memory_s']):>10s} {fmt_ms(rf['collective_s']):>9s} "
+            f"{rf['bottleneck']:>10s} {100 * rf['useful_flops_frac']:7.1f}% "
+            f"{peak:9.2f} {'ok':>7s}")
+    return "\n".join(out)
+
+
+def run(results_dir: str = "results"):
+    """benchmarks.run hook: emit one CSV row per dry-run cell."""
+    rows = load(results_dir)
+    out = []
+    for r in rows:
+        if r["status"] != "ok":
+            out.append((f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}", -1,
+                        "ERROR"))
+            continue
+        rf = r["roofline"]
+        dominant = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        out.append((
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            dominant * 1e6,
+            f"bound={rf['bottleneck']};useful={rf['useful_flops_frac']:.3f}"))
+    return out
+
+
+if __name__ == "__main__":
+    d = sys.argv[1] if len(sys.argv) > 1 else "results"
+    rows = load(d)
+    for mesh in ("single", "multi"):
+        if any(r.get("mesh") == mesh for r in rows):
+            print(f"\n=== mesh: {mesh} ===")
+            print(table(rows, mesh))

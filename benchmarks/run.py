@@ -1,0 +1,39 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Set REPRO_BENCH_STEPS to shrink the
+training benches (CI); roofline rows appear when results/dryrun_*.json exist
+(produced by repro.launch.dryrun).
+"""
+from __future__ import annotations
+
+import os
+
+
+def main() -> None:
+    steps = int(os.environ.get("REPRO_BENCH_STEPS", "150"))
+    rows = []
+
+    from benchmarks import (bench_fig1, bench_fig3, bench_fig4, bench_kernels,
+                            bench_table1, roofline_table)
+
+    for mod, kwargs in (
+        (bench_kernels, {}),
+        (bench_table1, {"steps": steps}),
+        (bench_fig1, {"steps": max(40, steps // 2)}),
+        (bench_fig3, {"steps": steps}),
+        (bench_fig4, {"steps": steps}),
+        (roofline_table, {}),
+    ):
+        try:
+            rows.extend(mod.run(**kwargs))
+        except Exception as e:  # noqa: BLE001
+            rows.append((f"{mod.__name__}/FAILED", -1.0,
+                         f"{type(e).__name__}:{e}"))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""End-to-end fine-tuning driver (deliverable b): train a decoder LM on the
+synthetic MetaMathQA-proxy with AdaGradSelect, evaluate GSM8K-protocol exact
+match, compare against full fine-tuning, checkpoint + resume.
+
+  PYTHONPATH=src python examples/finetune_math.py --preset ci      (~3 min CPU)
+  PYTHONPATH=src python examples/finetune_math.py --preset full    (~100M model,
+      300 steps — the paper-scale configuration; expect hours on CPU,
+      minutes on one accelerator)
+"""
+import argparse
+import tempfile
+
+import numpy as np
+
+from repro.configs.base import (ModelConfig, OptimizerConfig, SelectConfig,
+                                TrainConfig)
+from repro.data.synthetic import MathTaskConfig
+from repro.train.evaluate import math_accuracy
+from repro.train.trainer import Trainer
+
+PRESETS = {
+    # ~1M params: CI-scale sanity
+    "ci": dict(model=ModelConfig(
+        name="math-ci", family="dense", num_layers=6, d_model=96, num_heads=4,
+        num_kv_heads=2, head_dim=24, d_ff=384, vocab_size=32, dtype="float32",
+        remat="none", tie_embeddings=True), steps=200, batch=16),
+    # ~100M params: the end-to-end configuration
+    "full": dict(model=ModelConfig(
+        name="math-100m", family="dense", num_layers=12, d_model=768,
+        num_heads=12, num_kv_heads=4, head_dim=64, d_ff=3072, vocab_size=32,
+        dtype="float32", remat="none", tie_embeddings=True), steps=300,
+        batch=32),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="ci", choices=list(PRESETS))
+    ap.add_argument("--k", type=float, default=25.0)
+    ap.add_argument("--steps", type=int, default=0)
+    args = ap.parse_args()
+    preset = PRESETS[args.preset]
+    model, steps = preset["model"], args.steps or preset["steps"]
+
+    task = MathTaskConfig(digits=3, seq_len=64)
+    results = {}
+    for method in ("adagradselect", "all"):
+        ckdir = tempfile.mkdtemp(prefix=f"ft_{method}_")
+        tcfg = TrainConfig(
+            model=model,
+            select=SelectConfig(policy="adagradselect", k_percent=args.k,
+                                steps_per_epoch=max(1, steps // 3),
+                                epsilon_decay=0.05),
+            optimizer=OptimizerConfig(lr=3e-3, schedule="cosine",
+                                      warmup_steps=15, total_steps=steps),
+            seq_len=task.seq_len, global_batch=preset["batch"], steps=steps,
+            log_every=max(1, steps // 5), checkpoint_dir=ckdir,
+            checkpoint_every=max(1, steps // 2))
+        tr = Trainer(tcfg, method=method)
+        log = tr.train()
+        acc = math_accuracy(tr.state["params"], model, task, num_problems=64)
+        st = float(np.mean(log.step_times[3:]))
+        results[method] = (log.losses[-1], acc, st)
+        print(f"[{method}] loss {log.losses[0]:.3f}->{log.losses[-1]:.4f} "
+              f"exact-match {acc:.2%}  step {st*1e3:.0f}ms  (ckpt: {ckdir})")
+
+    a, f = results["adagradselect"], results["all"]
+    print(f"\nAdaGradSelect vs full-FT: accuracy {a[1]:.2%} vs {f[1]:.2%}, "
+          f"step time {a[2]/f[2]:.2f}x, "
+          f"optimizer-state residency {args.k:.0f}% of blocks "
+          f"(paper: ~equal accuracy, faster + 35% less memory)")
+
+
+if __name__ == "__main__":
+    main()

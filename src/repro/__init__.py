@@ -1,0 +1,13 @@
+"""repro: AdaGradSelect (adaptive gradient-guided block selection) as a
+production multi-pod JAX framework. See README.md / DESIGN.md.
+
+Public API surface:
+    repro.configs        -- get_config / get_smoke_config / SHAPES / dataclasses
+    repro.core           -- build_partition, block_grad_norms, select, masked AdamW
+    repro.models         -- registry.get(cfg): init/apply_train/prefill/decode_step
+    repro.train          -- Trainer, make_train_step, evaluate
+    repro.serve          -- engine.generate
+    repro.launch         -- mesh / dryrun / train / serve entry points
+"""
+
+__version__ = "1.0.0"

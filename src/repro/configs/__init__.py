@@ -1,0 +1,64 @@
+"""Architecture registry: ``--arch <id>`` resolution for launchers/tests."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    MULTI_POD,
+    SHAPES,
+    SINGLE_POD,
+    TINY_MESH,
+    MeshConfig,
+    ModelConfig,
+    OptimizerConfig,
+    SelectConfig,
+    ShapeConfig,
+    TrainConfig,
+)
+
+# arch id -> module name
+_ARCH_MODULES = {
+    "zamba2-7b": "zamba2_7b",
+    "chatglm3-6b": "chatglm3_6b",
+    "yi-9b": "yi_9b",
+    "llama3.2-1b": "llama3_2_1b",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "mamba2-2.7b": "mamba2_2_7b",
+    "paligemma-3b": "paligemma_3b",
+    # paper's own models
+    "qwen2.5-0.5b": "qwen2_5_0_5b",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+}
+
+ASSIGNED_ARCHS = tuple(list(_ARCH_MODULES)[:10])
+PAPER_ARCHS = ("qwen2.5-0.5b", "llama3.2-1b", "phi4-mini-3.8b")
+ALL_ARCHS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+    return mod.SMOKE
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def shapes_for(cfg: ModelConfig) -> list[ShapeConfig]:
+    """The shape cells that apply to this arch (long_500k only for
+    sub-quadratic prefill families and decode-against-long-KV families;
+    see DESIGN.md section 6)."""
+    out = [SHAPES["train_4k"], SHAPES["prefill_32k"], SHAPES["decode_32k"]]
+    if cfg.family in ("ssm", "hybrid"):
+        out.append(SHAPES["long_500k"])
+    return out

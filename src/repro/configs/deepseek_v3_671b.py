@@ -1,0 +1,43 @@
+"""deepseek-v3-671b: MLA attention + MoE (1 shared + 256 routed, top-8) + MTP.
+[arXiv:2412.19437]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=128,
+    num_kv_heads=128,        # MLA: KV latent shared; head count for attention math
+    d_ff=18432,              # dense-FFN width (first_k_dense layers)
+    vocab_size=129280,
+    # MLA
+    use_mla=True,
+    q_lora_rank=1536,
+    kv_lora_rank=512,
+    qk_nope_head_dim=128,
+    qk_rope_head_dim=64,
+    v_head_dim=128,
+    # MoE
+    num_experts=256,
+    num_experts_per_tok=8,
+    num_shared_experts=1,
+    moe_d_ff=2048,
+    first_k_dense=3,
+    moe_impl="ep",
+    ep_axes=("model", "data"),   # 256 experts over 256 chips (1 expert/chip)
+    # MTP
+    mtp_depth=1,
+    rope_theta=10000.0,
+    pad_vocab_multiple=16
+)
+
+SMOKE = CONFIG.replace(
+    pad_heads_to=0, pad_vocab_multiple=1,
+    num_layers=4, d_model=64, num_heads=4, num_kv_heads=4,
+    d_ff=160, vocab_size=256,
+    q_lora_rank=32, kv_lora_rank=16, qk_nope_head_dim=16,
+    qk_rope_head_dim=8, v_head_dim=16, head_dim=24,
+    num_experts=8, num_experts_per_tok=2, moe_d_ff=32, first_k_dense=1,
+    moe_impl="dense", mtp_depth=1, dtype="float32",
+)

@@ -1,0 +1,26 @@
+"""mamba2-2.7b: attention-free SSD (state-space duality) stack. [arXiv:2405.21060]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    num_layers=64,
+    d_model=2560,
+    num_heads=0,             # attention-free
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_chunk=256,
+    ssm_ngroups=1,
+    tie_embeddings=True,
+    pad_vocab_multiple=16
+)
+
+SMOKE = CONFIG.replace(
+    pad_heads_to=0, pad_vocab_multiple=1,
+    num_layers=4, d_model=64, vocab_size=256, ssm_state=16, ssm_head_dim=16,
+    ssm_chunk=32, dtype="float32",
+)

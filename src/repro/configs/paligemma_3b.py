@@ -1,0 +1,31 @@
+"""paligemma-3b: gemma decoder backbone + SigLIP vision frontend (STUB).
+[arXiv:2407.07726]
+
+``input_specs`` provides precomputed patch embeddings (num_frontend_tokens x
+d_model) as the image prefix; only the gemma backbone is implemented.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="paligemma-3b",
+    family="vlm",
+    num_layers=18,
+    d_model=2048,
+    num_heads=8,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab_size=257216,
+    frontend="vision",
+    num_frontend_tokens=256,
+    tie_embeddings=True,
+    act="gelu",
+    rope_theta=10000.0,
+    pad_heads_to=16, pad_vocab_multiple=16
+)
+
+SMOKE = CONFIG.replace(
+    pad_heads_to=0, pad_vocab_multiple=1,
+    num_layers=3, d_model=64, num_heads=4, num_kv_heads=1, head_dim=16,
+    d_ff=128, vocab_size=256, num_frontend_tokens=8, dtype="float32",
+)

@@ -1,0 +1,28 @@
+"""qwen3-moe-30b-a3b: 128 experts, top-8, GQA kv=4. [hf:Qwen/Qwen3-30B-A3B]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b",
+    family="moe",
+    num_layers=48,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=6144,               # dense width unused (first_k_dense=0); kept for reference
+    vocab_size=151936,
+    num_experts=128,
+    num_experts_per_tok=8,
+    moe_d_ff=768,
+    first_k_dense=0,
+    moe_impl="ep",
+    rope_theta=1000000.0,
+    pad_vocab_multiple=16
+)
+
+SMOKE = CONFIG.replace(
+    pad_heads_to=0, pad_vocab_multiple=1,
+    num_layers=3, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=256, num_experts=8, num_experts_per_tok=2,
+    moe_d_ff=32, moe_impl="dense", dtype="float32",
+)

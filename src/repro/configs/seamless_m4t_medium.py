@@ -1,0 +1,30 @@
+"""seamless-m4t-medium: encoder-decoder multimodal backbone. [arXiv:2308.11596]
+
+The audio frontend (w2v-BERT feature extractor) is a STUB: ``input_specs``
+provides precomputed frame embeddings of length seq_len // frontend_len_ratio.
+Only the transformer backbone is implemented/selected, per the assignment.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family="encdec",
+    num_layers=12,           # decoder layers
+    num_encoder_layers=12,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=256206,
+    frontend="audio",
+    frontend_len_ratio=4,    # src frames = seq_len // 4
+    act="gelu",
+    rope_theta=10000.0,
+    pad_vocab_multiple=16
+)
+
+SMOKE = CONFIG.replace(
+    pad_heads_to=0, pad_vocab_multiple=1,
+    num_layers=2, num_encoder_layers=2, d_model=64, num_heads=4,
+    num_kv_heads=4, head_dim=16, d_ff=128, vocab_size=256, dtype="float32",
+)

@@ -1,0 +1,30 @@
+"""zamba2-7b: Mamba2 backbone + shared attention block. [arXiv:2411.15242]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    num_layers=81,
+    d_model=3584,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=112,
+    d_ff=14336,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_chunk=256,
+    shared_attn_period=6,   # shared attn+mlp block applied after every 6 mamba layers
+    rope_theta=10000.0,
+    act="gelu",
+    pad_vocab_multiple=16
+)
+
+# Reduced config for CPU smoke tests (same family / same code paths).
+SMOKE = CONFIG.replace(
+    pad_heads_to=0, pad_vocab_multiple=1,
+    num_layers=7, d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
+    d_ff=128, vocab_size=256, ssm_state=16, ssm_head_dim=16, ssm_chunk=32,
+    shared_attn_period=3, dtype="float32",
+)

@@ -1,0 +1,11 @@
+"""AdaGradSelect core: block partitioning, selection policies, masked AdamW,
+optimizer-state residency (the paper's primary contribution)."""
+from repro.core.adagradselect import init_state, select  # noqa: F401
+from repro.core.partition import (  # noqa: F401
+    BlockPartition,
+    block_grad_norms,
+    build_partition,
+    layer_masks_dict,
+    leaf_masks,
+    params_per_block,
+)

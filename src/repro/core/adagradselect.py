@@ -1,0 +1,79 @@
+"""AdaGradSelect controller — the paper's Algorithm 2, fully in-jit.
+
+State (replicated, tiny) and transition:
+
+  epoch 1 (step < steps_per_epoch), with prob eps_t = eps0 * exp(-lambda t):
+      EXPLORATION  — top-k% blocks by gradient-norm signal (cumulative by
+                     default, per §3.2; "instant" reproduces Alg. 1 ranking)
+  otherwise, and always from epoch 2 on:
+      EXPLOITATION — p ~ Dirichlet(freq + delta); draw k% blocks without
+                     replacement ∝ p (Gumbel-top-k)
+
+  freq[b] += 1 for every selected block, every step (exploration included),
+  so early exploration shapes the later Dirichlet exploitation.
+
+Selection is deterministic given (seed, step): the PRNG key is folded with
+the step counter, so replicas/restarts reproduce the same arm sequence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SelectConfig
+from repro.core import selection
+
+
+def init_state(num_blocks: int, seed: int = 0) -> dict:
+    return {
+        "freq": jnp.zeros((num_blocks,), jnp.float32),
+        "cum_norms": jnp.zeros((num_blocks,), jnp.float32),
+        "step": jnp.zeros((), jnp.int32),
+        "key": jax.random.PRNGKey(seed),
+        "mask": jnp.ones((num_blocks,), jnp.bool_),  # step-0 default: all
+    }
+
+
+def epsilon(cfg: SelectConfig, step) -> jax.Array:
+    """eps_t = eps0 * exp(-lambda * t), zeroed from epoch 2 on."""
+    t = step.astype(jnp.float32)
+    eps = cfg.epsilon0 * jnp.exp(-cfg.epsilon_decay * t)
+    return jnp.where(step < cfg.steps_per_epoch, eps, 0.0)
+
+
+def select(cfg: SelectConfig, state: dict, block_norms: jax.Array,
+           num_blocks: int) -> tuple[jax.Array, dict]:
+    """One Alg. 2 iteration. ``block_norms``: this step's per-block gradient
+    L2 norms [num_blocks]. Returns (mask [num_blocks] bool, new state)."""
+    k = cfg.num_selected(num_blocks)
+    cum = state["cum_norms"] + block_norms
+    key = jax.random.fold_in(state["key"], state["step"])
+    k_eps, k_dir, k_gum, k_rnd = jax.random.split(key, 4)
+
+    if cfg.policy == "all":
+        mask = jnp.ones((num_blocks,), jnp.bool_)
+    elif cfg.policy == "random":
+        mask = selection.random_mask(k_rnd, num_blocks, k)
+    elif cfg.policy == "topk_grad":
+        # Alg. 1: rank by this step's gradient norms
+        mask = selection.topk_mask(block_norms, k)
+    elif cfg.policy == "adagradselect":
+        signal = cum  # cumulative gradient norms (§3.2)
+        explore_mask = selection.topk_mask(signal, k)
+        probs = selection.dirichlet_probs(k_dir, state["freq"], cfg.dirichlet_delta)
+        exploit_mask = selection.sample_without_replacement(k_gum, probs, k)
+        eps = epsilon(cfg, state["step"])
+        do_explore = jax.random.uniform(k_eps) < eps
+        mask = jnp.where(do_explore, explore_mask, exploit_mask)
+    else:
+        raise ValueError(f"unknown selection policy {cfg.policy!r}")
+
+    mask = selection.apply_always_include(mask, cfg.always_include)
+    new_state = {
+        "freq": state["freq"] + mask.astype(jnp.float32),
+        "cum_norms": cum,
+        "step": state["step"] + 1,
+        "key": state["key"],
+        "mask": mask,
+    }
+    return mask, new_state

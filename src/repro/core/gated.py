@@ -1,0 +1,59 @@
+"""Gated weight-gradient computation for frozen blocks (DESIGN.md 3.3).
+
+In eager PyTorch, ``requires_grad=False`` skips dW kernels for frozen blocks.
+Under jit the graph is static, so we gate the parameter-cotangent computation
+with ``lax.cond`` on the (runtime) selection mask instead: the activation
+gradient is always computed (the chain rule needs it to reach earlier
+selected blocks), while the ~1/3 of backward FLOPs that produce dW are
+skipped at runtime for unselected blocks — lax.cond lowers to real control
+flow on TPU.
+
+The forward is rematerialized inside each cotangent branch (jax.vjp closes
+over a fresh forward), so this mode implies block-level remat; that matches
+the framework default (cfg.remat="full").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gated_block_apply(apply_fn, params, x, mask_bit):
+    """apply_fn(params, x) -> (y, aux). mask_bit: scalar (bool/0-1) — True
+    means the block is selected this step and needs dW."""
+
+    @jax.custom_vjp
+    def f(params, x, mask_bit):
+        return apply_fn(params, x)
+
+    def fwd(params, x, mask_bit):
+        y, aux = apply_fn(params, x)
+        return (y, aux), (params, x, mask_bit)
+
+    def bwd(res, cts):
+        params, x, mask_bit = res
+        g_y, g_aux = cts
+
+        # activation cotangent: always needed
+        def fx(xx):
+            return apply_fn(params, xx)
+
+        _, vjp_x = jax.vjp(fx, x)
+        (dx,) = vjp_x((g_y, g_aux))
+
+        def dparams_real(_):
+            def fp(pp):
+                return apply_fn(pp, x)
+
+            _, vjp_p = jax.vjp(fp, params)
+            return vjp_p((g_y, g_aux))[0]
+
+        def dparams_zero(_):
+            return jax.tree.map(jnp.zeros_like, params)
+
+        dparams = jax.lax.cond(
+            jnp.asarray(mask_bit, jnp.bool_), dparams_real, dparams_zero, None)
+        return dparams, dx, None
+
+    f.defvjp(fwd, bwd)
+    return f(params, x, mask_bit)

@@ -1,0 +1,41 @@
+"""Selection primitives: top-k masking, Dirichlet sampling, Gumbel-top-k.
+
+All functions are jit-safe (static k, dynamic scores) — the entire
+AdaGradSelect controller runs inside the compiled train step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_mask(scores: jax.Array, k: int) -> jax.Array:
+    """Boolean mask of the k largest entries of ``scores`` [N] -> [N]."""
+    n = scores.shape[0]
+    _, idx = jax.lax.top_k(scores, k)
+    return jnp.zeros((n,), jnp.bool_).at[idx].set(True)
+
+
+def dirichlet_probs(key: jax.Array, freq: jax.Array, delta: float) -> jax.Array:
+    """p ~ Dirichlet(freq + delta) (paper §3.2)."""
+    alpha = freq.astype(jnp.float32) + delta
+    return jax.random.dirichlet(key, alpha)
+
+
+def sample_without_replacement(key: jax.Array, probs: jax.Array, k: int) -> jax.Array:
+    """Draw k items without replacement with probability proportional to
+    ``probs`` — the Gumbel-top-k trick (exact for Plackett-Luce sampling).
+    Returns a boolean mask [N]."""
+    g = jax.random.gumbel(key, probs.shape)
+    keys = jnp.log(probs + 1e-20) + g
+    return topk_mask(keys, k)
+
+
+def random_mask(key: jax.Array, n: int, k: int) -> jax.Array:
+    return topk_mask(jax.random.uniform(key, (n,)), k)
+
+
+def apply_always_include(mask: jax.Array, always_include: tuple) -> jax.Array:
+    for i in always_include:
+        mask = mask.at[i].set(True)
+    return mask

@@ -1,0 +1,41 @@
+"""Gradient compression for the data-parallel all-reduce (beyond-paper
+distributed-optimization feature; config: optimizer.grad_compression).
+
+``compressed_psum``: shard_map helper that casts to bf16 before the psum and
+keeps an f32 error-feedback buffer so the quantization error is re-injected
+the next step (1-bit-Adam-style EF). Halves the DP collective bytes — the
+effect is directly visible in the dry-run's collective-bytes term.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def quantize_with_feedback(g, err):
+    """-> (bf16 payload, new error). g, err: f32."""
+    target = g + err
+    q = target.astype(jnp.bfloat16)
+    return q, target - q.astype(jnp.float32)
+
+
+def init_error_state(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compressed_grad_sync(grads, err_state, mesh, axes=("data",)):
+    """All-reduce (mean) gradients over the DP axes in bf16 with error
+    feedback. grads: pytree of *per-shard* (unreduced) f32/bf16 grads laid
+    out so the DP axes are unsharded dims; used inside shard_map train steps.
+    Returns (synced f32 grads, new error state)."""
+    def one(g, e):
+        q, e2 = quantize_with_feedback(g.astype(jnp.float32), e)
+        for ax in axes:
+            q = jax.lax.pmean(q, ax)
+        return q.astype(jnp.float32), e2
+
+    flat = jax.tree.map(one, grads, err_state)
+    g2 = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    e2 = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    return g2, e2

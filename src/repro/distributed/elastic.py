@@ -1,0 +1,36 @@
+"""Elastic rescaling: move a TrainState between meshes of different sizes.
+
+Restart-based elasticity (the production TPU pattern): on a membership
+change the job restores the latest checkpoint onto the new mesh.
+``reshard_state`` additionally supports live resharding when both meshes
+are addressable from this process (used by tests and single-host runs).
+
+The data pipeline is a pure function of the step, and selection state is
+replicated, so rescaling only requires resharding arrays and (optionally)
+re-chunking the global batch — training is bitwise-continuable as long as
+the global batch stays fixed.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+
+
+def reshard_state(state, new_shardings):
+    """Pull to host, re-place onto the new mesh's shardings."""
+    host = jax.tree.map(np.asarray, jax.device_get(state))
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s) if isinstance(s, NamedSharding)
+        else jax.device_put(x), host, new_shardings)
+
+
+def validate_rescale(old_mesh_shape: tuple, new_mesh_shape: tuple,
+                     global_batch: int) -> None:
+    """Invariants for a safe rescale: the global batch must stay divisible
+    by the new DP degree (model math is unaffected by the mesh change)."""
+    new_dp = int(np.prod(new_mesh_shape[:-1]))
+    if global_batch % new_dp:
+        raise ValueError(
+            f"global_batch {global_batch} not divisible by new DP degree "
+            f"{new_dp} (mesh {new_mesh_shape}); adjust batch or mesh")

@@ -1,0 +1,46 @@
+"""Fused per-block gradient sum-of-squares (paper Alg. 1 lines 1-6).
+
+The selection hot-spot: without fusion, computing per-block norms costs one
+extra HBM pass over every gradient leaf. The kernel streams a stacked
+[L, R] gradient once through VMEM in 128-lane-aligned tiles, keeping one
+f32 partial per layer in VMEM scratch and writing it out on the last chunk.
+
+Grid: (L, R / CHUNK) — the chunk axis is innermost (sequential on TPU), so
+the accumulator legally carries across the chunks of one layer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK = 2048  # 16 sublanes x 128 lanes of f32 per tile
+
+
+def _kernel(g_ref, o_ref, acc_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[0, 0] = 0.0
+
+    g = g_ref[...].astype(jnp.float32)
+    acc_ref[0, 0] += jnp.sum(g * g)
+
+    @pl.when(pl.program_id(1) == pl.num_programs(1) - 1)
+    def _done():
+        o_ref[0] = acc_ref[0, 0]
+
+
+def block_grad_sq_norms(g2d: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """g2d: [L, R] (R padded to CHUNK by ops.py) -> [L] f32 sum of squares."""
+    l, r = g2d.shape
+    assert r % CHUNK == 0, (r, CHUNK)
+    return pl.pallas_call(
+        _kernel,
+        grid=(l, r // CHUNK),
+        in_specs=[pl.BlockSpec((1, CHUNK), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((l,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, 1), jnp.float32)],
+        interpret=interpret,
+    )(g2d)

@@ -1,0 +1,74 @@
+"""Flash-decoding: one query token against a long KV cache.
+
+Layout: q [BH, D], k/v [BH, S, D] (GQA expanded outside, like
+flash_attention.py). Grid (BH, S/BK) with the KV-block axis innermost
+(sequential), carrying online-softmax stats (m, l, acc) in VMEM scratch —
+a single pass over the cache at HBM bandwidth, which is the roofline for
+decode. ``valid_len`` masks unwritten cache slots.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BK = 512
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bk, scale):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[0, 0] = NEG_INF
+        l_ref[0, 0] = 0.0
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # [D]
+    k = k_ref[0].astype(jnp.float32)                  # [BK, D]
+    v = v_ref[0].astype(jnp.float32)
+    s = k @ q                                         # [BK]
+    kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bk,), 0)
+    s = jnp.where(kpos < len_ref[0], s, NEG_INF)
+    m_prev, l_prev = m_ref[0, 0], l_ref[0, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    p = jnp.exp(s - m_new)                            # [BK]
+    alpha = jnp.exp(m_prev - m_new)
+    m_ref[0, 0] = m_new
+    l_ref[0, 0] = l_prev * alpha + jnp.sum(p)
+    acc_ref[...] = acc_ref[...] * alpha + (p @ v)[None, :]
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _done():
+        o_ref[0] = (acc_ref[0] / jnp.maximum(l_ref[0, 0], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, valid_len, *, bk=DEFAULT_BK, interpret=True):
+    """q: [BH, D]; k, v: [BH, S, D]; valid_len: scalar i32 -> o [BH, D]."""
+    bh, s, d = k.shape
+    bk = min(bk, s)
+    assert s % bk == 0, (s, bk)
+    scale = d ** -0.5
+    vlen = jnp.asarray(valid_len, jnp.int32).reshape(1)
+    return pl.pallas_call(
+        partial(_kernel, bk=bk, scale=scale),
+        grid=(bh, s // bk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, j: (0,)),
+            pl.BlockSpec((1, d), lambda b, j: (b, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda b, j: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((1, 1), jnp.float32),
+                        pltpu.VMEM((1, 1), jnp.float32),
+                        pltpu.VMEM((1, d), jnp.float32)],
+        interpret=interpret,
+    )(vlen, q, k, v)

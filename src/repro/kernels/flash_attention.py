@@ -1,0 +1,220 @@
+"""Causal flash attention (fwd + bwd) — FlashAttention-2 schedule on TPU.
+
+Layout: [B*H, S, D] (GQA is gather-expanded to MHA outside the kernel, on
+the model-sharded head axis — see models/layers/attention_core.py).
+
+Forward   grid (BH, S/BQ):  online-softmax over K blocks held in VMEM one
+          BK-tile at a time; saves LSE for the backward.
+Backward  two kernels (the standard split to keep accumulation orders
+          grid-sequential):
+            dq:   grid (BH, S/BQ), inner loop over K blocks
+            dkv:  grid (BH, S/BK), inner loop over Q blocks
+          probs are rematerialized from q, k and the saved LSE.
+
+Tiles default to (BQ, BK) = (128, 128) with D padded to a lane multiple —
+MXU-aligned and ~(3*128*D + 128*128)*4 bytes of VMEM working set.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------- forward
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, bq, bk, scale,
+                causal):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale          # [BQ, D]
+    d = q.shape[-1]
+    nk = pl.num_programs(1) * 0 + (k_ref.shape[1] // bk)
+
+    def body(j, carry):
+        m_prev, l_prev, acc = carry
+        k = k_ref[0, pl.ds(j * bk, bk), :].astype(jnp.float32)   # [BK, D]
+        v = v_ref[0, pl.ds(j * bk, bk), :].astype(jnp.float32)
+        s = q @ k.T                                               # [BQ, BK]
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        acc = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+    # causal: only K blocks with j*bk <= (qi+1)*bq - 1 contribute
+    upper = jnp.minimum(nk, (qi + 1) * bq // bk) if causal else nk
+    m, l, acc = jax.lax.fori_loop(0, upper, body, (m0, l0, acc0))
+    l = jnp.maximum(l, 1e-30)
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+    lse_ref[0] = (m + jnp.log(l)).astype(jnp.float32)
+
+
+def flash_attention_fwd(q, k, v, *, bq=DEFAULT_BQ, bk=DEFAULT_BK,
+                        causal=True, interpret=True):
+    """q,k,v: [BH, S, D] -> (o [BH, S, D], lse [BH, S])."""
+    bh, s, d = q.shape
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    scale = d ** -0.5
+    kern = partial(_fwd_kernel, bq=bq, bk=bk, scale=scale, causal=causal)
+    return pl.pallas_call(
+        kern,
+        grid=(bh, s // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, s, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=(pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+                   pl.BlockSpec((1, bq), lambda b, i: (b, i))),
+        out_shape=(jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+                   jax.ShapeDtypeStruct((bh, s), jnp.float32)),
+        interpret=interpret,
+    )(q, k, v)
+
+
+# ----------------------------------------------------------------- backward
+
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+                   *, bq, bk, scale, causal):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)                   # [BQ, D]
+    do = do_ref[0].astype(jnp.float32)
+    lse = lse_ref[0]                                   # [BQ]
+    delta = delta_ref[0]                               # [BQ] = rowsum(do*o)
+    d = q.shape[-1]
+    nk = k_ref.shape[1] // bk
+
+    def body(j, dq):
+        k = k_ref[0, pl.ds(j * bk, bk), :].astype(jnp.float32)
+        v = v_ref[0, pl.ds(j * bk, bk), :].astype(jnp.float32)
+        s = (q @ k.T) * scale
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])                  # [BQ, BK]
+        dp = do @ v.T
+        ds = p * (dp - delta[:, None]) * scale
+        return dq + ds @ k
+
+    upper = jnp.minimum(nk, (qi + 1) * bq // bk) if causal else nk
+    dq = jax.lax.fori_loop(0, upper, body,
+                           jnp.zeros((bq, d), jnp.float32))
+    dq_ref[0] = dq.astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    dk_ref, dv_ref, *, bq, bk, scale, causal):
+    ki = pl.program_id(1)
+    k = k_ref[0].astype(jnp.float32)                   # [BK, D]
+    v = v_ref[0].astype(jnp.float32)
+    d = k.shape[-1]
+    nq = q_ref.shape[1] // bq
+
+    def body(i, carry):
+        dk, dv = carry
+        q = q_ref[0, pl.ds(i * bq, bq), :].astype(jnp.float32)
+        do = do_ref[0, pl.ds(i * bq, bq), :].astype(jnp.float32)
+        lse = lse_ref[0, pl.ds(i * bq, bq)]
+        delta = delta_ref[0, pl.ds(i * bq, bq)]
+        s = (q @ k.T) * scale                          # [BQ, BK]
+        if causal:
+            qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])
+        dv = dv + p.T @ do
+        dp = do @ v.T
+        ds = p * (dp - delta[:, None]) * scale
+        return dk + ds.T @ q, dv
+
+    lower = (ki * bk) // bq if causal else 0
+    dk0 = jnp.zeros((bk, d), jnp.float32)
+    dv0 = jnp.zeros((bk, d), jnp.float32)
+    dk, dv = jax.lax.fori_loop(lower, nq, body, (dk0, dv0))
+    dk_ref[0] = dk.astype(dk_ref.dtype)
+    dv_ref[0] = dv.astype(dv_ref.dtype)
+
+
+def flash_attention_bwd(q, k, v, o, lse, do, *, bq=DEFAULT_BQ, bk=DEFAULT_BK,
+                        causal=True, interpret=True):
+    bh, s, d = q.shape
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+    scale = d ** -0.5
+    dq = pl.pallas_call(
+        partial(_bwd_dq_kernel, bq=bq, bk=bk, scale=scale, causal=causal),
+        grid=(bh, s // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, s, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, bq), lambda b, i: (b, i)),
+            pl.BlockSpec((1, bq), lambda b, i: (b, i)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    dk, dv = pl.pallas_call(
+        partial(_bwd_dkv_kernel, bq=bq, bk=bk, scale=scale, causal=causal),
+        grid=(bh, s // bk),
+        in_specs=[
+            pl.BlockSpec((1, s, d), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, s, d), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, s), lambda b, j: (b, 0)),
+            pl.BlockSpec((1, s), lambda b, j: (b, 0)),
+        ],
+        out_specs=(pl.BlockSpec((1, bk, d), lambda b, j: (b, j, 0)),
+                   pl.BlockSpec((1, bk, d), lambda b, j: (b, j, 0))),
+        out_shape=(jax.ShapeDtypeStruct((bh, s, d), k.dtype),
+                   jax.ShapeDtypeStruct((bh, s, d), v.dtype)),
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    return dq, dk, dv
+
+
+# ------------------------------------------------------------- public op
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal=True, bq=DEFAULT_BQ, bk=DEFAULT_BK,
+                    interpret=True):
+    o, _ = flash_attention_fwd(q, k, v, bq=bq, bk=bk, causal=causal,
+                               interpret=interpret)
+    return o
+
+
+def _vjp_fwd(q, k, v, causal, bq, bk, interpret):
+    o, lse = flash_attention_fwd(q, k, v, bq=bq, bk=bk, causal=causal,
+                                 interpret=interpret)
+    return o, (q, k, v, o, lse)
+
+
+def _vjp_bwd(causal, bq, bk, interpret, res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = flash_attention_bwd(q, k, v, o, lse, do, bq=bq, bk=bk,
+                                     causal=causal, interpret=interpret)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,93 @@
+"""Jit-ready wrappers around the Pallas kernels.
+
+Handle shape normalization (flatten/pad to kernel layouts) and backend
+dispatch: ``interpret=True`` on CPU (validation), compiled Mosaic on TPU.
+The model layers call these when cfg.use_pallas resolves truthy.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import block_grad_norm as _bgn
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import masked_adamw as _ma
+from repro.kernels import rmsnorm as _rn
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_flat(x: jax.Array, chunk: int) -> jax.Array:
+    """[L, ...] -> [L, R] with R padded up to a multiple of ``chunk``."""
+    l = x.shape[0]
+    flat = x.reshape(l, -1)
+    r = flat.shape[1]
+    pad = (-r) % chunk
+    if pad:
+        flat = jnp.pad(flat, [(0, 0), (0, pad)])
+    return flat
+
+
+def block_grad_sq_norms(g: jax.Array) -> jax.Array:
+    """g: [L, ...] stacked gradient leaf -> [L] f32 sum of squares."""
+    flat = _pad_flat(g, _bgn.CHUNK)
+    return _bgn.block_grad_sq_norms(flat, interpret=_interpret())
+
+
+def masked_adamw(p, g, m, v, sel, counts, lr, b1, b2, eps, wd):
+    """Leaf-shaped masked AdamW. p,g,m,v: [L, ...]; sel/counts broadcastable
+    [L,1,..] or [L]. Returns (p', m', v') in original shapes."""
+    shape = p.shape
+    l = shape[0]
+    sel1 = sel.reshape(l)
+    cnt1 = counts.reshape(l)
+    pf, gf = _pad_flat(p, _ma.CHUNK), _pad_flat(g, _ma.CHUNK)
+    mf, vf = _pad_flat(m, _ma.CHUNK), _pad_flat(v, _ma.CHUNK)
+    r_orig = 1
+    for d in shape[1:]:
+        r_orig *= d
+    p2, m2, v2 = _ma.masked_adamw(pf, gf, mf, vf, sel1, cnt1, lr, b1, b2,
+                                  eps, wd, interpret=_interpret())
+    unpad = lambda t: t[:, :r_orig].reshape(shape)  # noqa: E731
+    return unpad(p2), m2[:, :r_orig].reshape(shape), v2[:, :r_orig].reshape(shape)
+
+
+def flash_attention(q, k, v, *, causal=True):
+    """q,k,v: [B, S, H, D] (layer layout; kv already head-expanded) ->
+    [B, S, H, D]."""
+    b, s, h, d = q.shape
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(b * h, s, d)  # noqa: E731
+    bq = min(_fa.DEFAULT_BQ, s)
+    bk = min(_fa.DEFAULT_BK, s)
+    o = _fa.flash_attention(fold(q), fold(k), fold(v), causal, bq, bk,
+                            _interpret())
+    return o.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+
+
+def decode_attention(q, k, v, valid_len):
+    """q: [B, 1, H, D]; k,v: [B, S, H, D] (head-expanded cache) ->
+    [B, 1, H, D]."""
+    b, s, h, d = k.shape
+    qf = q.reshape(b, h, d).reshape(b * h, d)
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(b * h, s, d)  # noqa: E731
+    o = _dec.decode_attention(qf, fold(k), fold(v), valid_len,
+                              interpret=_interpret())
+    return o.reshape(b, 1, h, d)
+
+
+def rmsnorm(x, scale, eps=1e-5):
+    """x: [..., D] -> fused RMSNorm over the trailing dim."""
+    shape = x.shape
+    n = 1
+    for d in shape[:-1]:
+        n *= d
+    flat = x.reshape(n, shape[-1])
+    rows = _rn.DEFAULT_ROWS
+    while n % rows:
+        rows //= 2
+    out = _rn.rmsnorm(flat, scale, eps, rows=max(rows, 1),
+                      interpret=_interpret())
+    return out.reshape(shape)

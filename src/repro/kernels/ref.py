@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_grad_sq_norms(g: jax.Array) -> jax.Array:
+    """g: [L, ...] -> [L] sum of squares over non-leading axes (f32)."""
+    gf = g.astype(jnp.float32)
+    return jnp.sum(gf * gf, axis=tuple(range(1, gf.ndim)))
+
+
+def masked_adamw(p, g, m, v, sel, counts, lr, b1, b2, eps, wd):
+    """p,g,m,v: [L, R]; sel, counts: [L] (counts = post-increment per-block
+    step). Returns (p', m', v') with the masked-AdamW semantics of
+    core/masked_adamw.py."""
+    gf = g.astype(jnp.float32)
+    selb = (sel > 0)[:, None]
+    m2 = jnp.where(selb, b1 * m + (1 - b1) * gf, m)
+    v2 = jnp.where(selb, b2 * v + (1 - b2) * gf * gf, v)
+    c = jnp.maximum(counts, 1.0)[:, None]
+    mhat = m2 / (1 - b1 ** c)
+    vhat = v2 / (1 - b2 ** c)
+    pf = p.astype(jnp.float32)
+    step = lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * pf)
+    p2 = jnp.where(selb, pf - step, pf)
+    return p2.astype(p.dtype), m2, v2
+
+
+def flash_attention(q, k, v, *, causal=True):
+    """q,k,v: [B, H, S, D] (MHA layout) -> [B, H, S, D]. f32 softmax."""
+    s = q.shape[2]
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k, v, valid_len):
+    """q: [B, H, D]; k,v: [B, H, S, D]; valid_len: scalar — masked single-
+    query attention."""
+    s = k.shape[2]
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    mask = jnp.arange(s) < valid_len
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhk,bhkd->bhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rmsnorm(x, scale, eps=1e-5):
+    """x: [N, D]; scale: [D]."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,33 @@
+"""Fused RMSNorm forward: one VMEM pass per row tile (f32 statistics)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_ROWS = 8
+
+
+def _kernel(x_ref, s_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)                # [R, D]
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * s_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def rmsnorm(x, scale, eps=1e-5, *, rows=DEFAULT_ROWS, interpret=True):
+    """x: [N, D]; scale: [D] -> [N, D]. N must be divisible by ``rows``."""
+    n, d = x.shape
+    rows = min(rows, n)
+    assert n % rows == 0, (n, rows)
+    return pl.pallas_call(
+        partial(_kernel, eps=eps),
+        grid=(n // rows,),
+        in_specs=[pl.BlockSpec((rows, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=interpret,
+    )(x, scale)

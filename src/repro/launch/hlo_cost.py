@@ -1,0 +1,373 @@
+"""Trip-count-aware cost analysis over compiled HLO text.
+
+``compiled.cost_analysis()`` visits every computation ONCE — a lax.scan over
+61 layers reports 1/61st of the real FLOPs (verified; see EXPERIMENTS.md
+§Dry-run). Since the whole framework scans over layers/chunks/microbatches,
+we derive roofline terms from the partitioned HLO text instead, walking the
+call graph with while-loop trip counts:
+
+  flops       — 2 * |out| * contraction for every dot, x enclosing trips
+  bytes       — per memory-op (fusions: params + outputs; the XLA definition
+                of bytes-accessed for a fused kernel), x enclosing trips
+  collectives — ring-model link bytes per op kind, x enclosing trips
+
+Trip counts come from the scan's canonical while condition
+(`compare(iter, constant(N)), direction=LT`). ``conditional`` takes the max
+across branches (runtime executes one). This is an estimate — layout copies
+and overlap are not modeled — but unlike cost_analysis it is *structurally*
+correct for scanned programs; both numbers are recorded in the dry-run JSON.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+_SHAPE_RE = re.compile(r"([a-z]\w*)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(.*?\)|\S+)\s+([\w\-]+)\(")
+_OPERANDS = re.compile(r"%([\w\.\-]+)")
+_CALLS = re.compile(r"(?:calls|to_apply|body|condition|true_computation|"
+                    r"false_computation)=%([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "while", "call", "conditional", "after-all",
+               "reshape", "iota", "partition-id", "replica-id"}
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
+    elems = bytes_ = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        bytes_ += n * _DTYPE_BYTES[dt]
+    return elems, bytes_
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    operands: list[str]
+    calls: list[str]
+    branches: list[str]
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list[Instr] = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)  # value name -> type str
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        # computation headers start at column 0 and end with "{"
+        m = (_COMP_HDR.match(line)
+             if line and not line[0].isspace() and line.rstrip().endswith("{")
+             else None)
+        if m and ("->" in line):
+            cur = Computation(m.group(1))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        mi = _INSTR.match(line)
+        if not mi:
+            continue
+        name, type_str, op = mi.group(1), mi.group(2), mi.group(3)
+        rest = line[mi.end():]
+        head = rest.split(")", 1)[0]
+        operands = _OPERANDS.findall(head)
+        calls = _CALLS.findall(line)
+        br = _BRANCHES.search(line)
+        branches = _OPERANDS.findall(br.group(1)) if br else []
+        cur.instrs.append(Instr(name, type_str, op, operands, calls + branches,
+                                branches, line))
+        cur.shapes[name] = type_str
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Canonical scan condition: compare(iter, constant(N)), LT."""
+    consts = {}
+    for ins in cond.instrs:
+        if ins.op == "constant":
+            m = re.search(r"constant\((\d+)\)", ins.line)
+            if m:
+                consts[ins.name] = int(m.group(1))
+    # find compare with a constant operand (possibly via a fusion param)
+    best = None
+    for ins in cond.instrs:
+        if ins.op == "compare" or "compare" in ins.line:
+            for o in ins.operands:
+                if o in consts:
+                    best = consts[o]
+    if best is None and consts:
+        best = max(consts.values())
+    return best if best else 1
+
+
+@dataclass
+class CostTotals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    link_bytes: float = 0.0
+    coll_bytes_by_op: dict = field(default_factory=dict)
+    coll_count_by_op: dict = field(default_factory=dict)
+    unknown_trip_whiles: int = 0
+    # diagnostics: "op_name shape" -> (total scaled bytes, count)
+    top_mem: dict = field(default_factory=dict)
+    top_coll: dict = field(default_factory=dict)
+    top_flop: dict = field(default_factory=dict)
+
+    def summarize(self, k: int = 12) -> dict:
+        def top(d):
+            items = sorted(d.items(), key=lambda kv: -kv[1][0])[:k]
+            return [{"what": w, "total": v, "count": c} for w, (v, c) in items]
+        return {"mem": top(self.top_mem), "coll": top(self.top_coll),
+                "flop": top(self.top_flop)}
+
+
+class HloCost:
+    def __init__(self, text: str, num_devices: int):
+        self.comps = parse_module(text)
+        self.num_devices = num_devices
+        self._cache: dict[str, CostTotals] = {}
+        entry = None
+        for line in text.splitlines():
+            if line.startswith("ENTRY"):
+                m = re.search(r"ENTRY\s+%?([\w\.\-]+)", line)
+                if m:
+                    entry = m.group(1)
+        self.entry = entry
+
+    def total(self) -> CostTotals:
+        if self.entry and self.entry in self.comps:
+            return self._comp_cost(self.entry)
+        # fallback: largest computation
+        big = max(self.comps, key=lambda c: len(self.comps[c].instrs))
+        return self._comp_cost(big)
+
+    # ------------------------------------------------------------- internals
+    def _comp_cost(self, name: str) -> CostTotals:
+        if name in self._cache:
+            return self._cache[name]
+        comp = self.comps.get(name)
+        out = CostTotals()
+        self._cache[name] = out  # cycle guard
+        if comp is None:
+            return out
+        for ins in comp.instrs:
+            self._add_instr(out, comp, ins)
+        return out
+
+    def _add_scaled(self, out: CostTotals, sub: CostTotals, k: float):
+        out.flops += sub.flops * k
+        out.bytes += sub.bytes * k
+        out.link_bytes += sub.link_bytes * k
+        for op, v in sub.coll_bytes_by_op.items():
+            out.coll_bytes_by_op[op] = out.coll_bytes_by_op.get(op, 0.0) + v * k
+        for op, v in sub.coll_count_by_op.items():
+            out.coll_count_by_op[op] = out.coll_count_by_op.get(op, 0) + v * k
+        out.unknown_trip_whiles += sub.unknown_trip_whiles
+        for dst, src in ((out.top_mem, sub.top_mem),
+                         (out.top_coll, sub.top_coll),
+                         (out.top_flop, sub.top_flop)):
+            for w, (v, c) in src.items():
+                v0, c0 = dst.get(w, (0.0, 0))
+                dst[w] = (v0 + v * k, c0 + int(c * k))
+
+    @staticmethod
+    def _note(d: dict, what: str, val: float):
+        v0, c0 = d.get(what, (0.0, 0))
+        d[what] = (v0 + val, c0 + 1)
+
+    def _add_instr(self, out: CostTotals, comp: Computation, ins: Instr):
+        op = ins.op
+        if op == "while":
+            body = cond = None
+            mb = re.search(r"body=%([\w\.\-]+)", ins.line)
+            mc = re.search(r"condition=%([\w\.\-]+)", ins.line)
+            body = mb.group(1) if mb else None
+            cond = mc.group(1) if mc else None
+            trip = _trip_count(self.comps[cond]) if cond in self.comps else 1
+            if trip == 1:
+                out.unknown_trip_whiles += 1
+            if body:
+                self._add_scaled(out, self._comp_cost(body), trip)
+            return
+        if op == "conditional":
+            subs = [self._comp_cost(c) for c in ins.calls if c in self.comps]
+            if subs:
+                best = max(subs, key=lambda s: s.flops + s.bytes)
+                self._add_scaled(out, best, 1.0)
+            return
+        if op in ("call", "async-start"):
+            for c in ins.calls:
+                if c in self.comps:
+                    self._add_scaled(out, self._comp_cost(c), 1.0)
+            return
+        if op == "fusion":
+            # flops: recurse (dots can live inside fusions);
+            # bytes: output + operands, EXCEPT operands the fused computation
+            # only slices (all_to_all/gather decompositions pass the whole
+            # buffer but read one row)
+            for c in ins.calls:
+                if c in self.comps:
+                    sub = self._comp_cost(c)
+                    out.flops += sub.flops
+                    self._add_coll_only(out, sub)
+            b = self._fusion_bytes(comp, ins)
+            out.bytes += b
+            self._note(out.top_mem, f"fusion {ins.type_str[:60]}", b)
+            return
+        base = op.replace("-start", "")
+        if base in COLLECTIVE_OPS:
+            if op.endswith("-done"):
+                return
+            _, size = _shape_elems_bytes(ins.type_str)
+            n = self._group_size(ins.line)
+            if n > 1:
+                mult = {"all-reduce": 2.0 * (n - 1) / n,
+                        "all-gather": (n - 1) / n,
+                        "reduce-scatter": float(n - 1),
+                        "all-to-all": (n - 1) / n,
+                        "collective-permute": 1.0}[base]
+                out.coll_bytes_by_op[base] = (
+                    out.coll_bytes_by_op.get(base, 0.0) + size * mult)
+                out.coll_count_by_op[base] = (
+                    out.coll_count_by_op.get(base, 0) + 1)
+                out.link_bytes += size * mult
+                self._note(out.top_coll, f"{base} {ins.type_str[:60]} n={n}",
+                           size * mult)
+            out.bytes += self._io_bytes(comp, ins)
+            return
+        if op in ("dot", "dot_general"):
+            elems, _ = _shape_elems_bytes(ins.type_str)
+            contract = 1
+            mc = _CONTRACT.search(ins.line)
+            if mc and ins.operands:
+                lhs = comp.shapes.get(ins.operands[0], "")
+                dims_str = [d for d in mc.group(1).split(",") if d]
+                shapes = _SHAPE_RE.findall(lhs)
+                if shapes:
+                    lhs_dims = [int(d) for d in shapes[0][1].split(",") if d]
+                    for di in dims_str:
+                        i = int(di)
+                        if i < len(lhs_dims):
+                            contract *= lhs_dims[i]
+            out.flops += 2.0 * elems * contract
+            out.bytes += self._io_bytes(comp, ins)
+            self._note(out.top_flop, f"dot {ins.type_str[:60]} k={contract}",
+                       2.0 * elems * contract)
+            return
+        if op == "convolution":
+            # rare here; approximate as dot over input feature window
+            elems, _ = _shape_elems_bytes(ins.type_str)
+            out.flops += 2.0 * elems  # lower bound
+            out.bytes += self._io_bytes(comp, ins)
+            return
+        if op in _SKIP_BYTES:
+            return
+        if op in ("slice", "dynamic-slice", "gather"):
+            # reads only the selected region ~= output size (counting the
+            # full input would overcount XLA:CPU's all_to_all/gather
+            # decompositions by the slice count)
+            _, ob = _shape_elems_bytes(ins.type_str)
+            b = float(2 * ob)
+        elif op in ("dynamic-update-slice", "scatter"):
+            # in-place update: read+write of the update region (operand 1)
+            ts = comp.shapes.get(ins.operands[1]) if len(ins.operands) > 1 else None
+            _, ub = _shape_elems_bytes(ts or ins.type_str)
+            b = float(2 * ub)
+        else:
+            b = self._io_bytes(comp, ins)
+        out.bytes += b
+        self._note(out.top_mem, f"{op} {ins.type_str[:60]}", b)
+
+    def _add_coll_only(self, out: CostTotals, sub: CostTotals):
+        out.link_bytes += sub.link_bytes
+        for op, v in sub.coll_bytes_by_op.items():
+            out.coll_bytes_by_op[op] = out.coll_bytes_by_op.get(op, 0.0) + v
+        for op, v in sub.coll_count_by_op.items():
+            out.coll_count_by_op[op] = out.coll_count_by_op.get(op, 0) + v
+
+    def _fusion_bytes(self, comp: Computation, ins: Instr) -> float:
+        """Output + operand bytes, with slice-only-consumed params counted at
+        their sliced size."""
+        _, ob = _shape_elems_bytes(ins.type_str)
+        total = float(ob)
+        fused = self.comps.get(ins.calls[0]) if ins.calls else None
+        sliced_reads: dict[int, float] = {}
+        if fused is not None:
+            pidx = {}
+            for fi in fused.instrs:
+                if fi.op == "parameter":
+                    m = re.search(r"parameter\((\d+)\)", fi.line)
+                    if m:
+                        pidx[fi.name] = int(m.group(1))
+            consumers: dict[str, list[Instr]] = {}
+            for fi in fused.instrs:
+                for o in fi.operands:
+                    if o in pidx:
+                        consumers.setdefault(o, []).append(fi)
+            for pname, idx in pidx.items():
+                cons = consumers.get(pname, [])
+                if cons and all(c.op in ("slice", "dynamic-slice", "gather")
+                                for c in cons):
+                    sliced_reads[idx] = sum(
+                        _shape_elems_bytes(c.type_str)[1] for c in cons)
+        for i, o in enumerate(ins.operands):
+            ts = comp.shapes.get(o)
+            if ts is None:
+                continue
+            _, bfull = _shape_elems_bytes(ts)
+            total += min(sliced_reads.get(i, bfull), bfull)
+        return total
+
+    def _io_bytes(self, comp: Computation, ins: Instr) -> float:
+        _, ob = _shape_elems_bytes(ins.type_str)
+        total = float(ob)
+        for o in ins.operands:
+            ts = comp.shapes.get(o)
+            if ts:
+                _, b = _shape_elems_bytes(ts)
+                total += b
+        return total
+
+    def _group_size(self, line: str) -> int:
+        m = _GROUPS_IOTA.search(line)
+        if m:
+            return int(m.group(2))
+        m = _GROUPS_LIST.search(line)
+        if m:
+            return len(m.group(1).split(","))
+        return self.num_devices
+
+
+def analyze_text(text: str, num_devices: int) -> CostTotals:
+    return HloCost(text, num_devices).total()

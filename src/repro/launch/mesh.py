@@ -1,0 +1,27 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before any device query).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+from repro.configs.base import MeshConfig, MULTI_POD, SINGLE_POD, TINY_MESH
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(cfg: MeshConfig):
+    return jax.make_mesh(cfg.shape, cfg.axes,
+                         axis_types=(AxisType.Auto,) * len(cfg.axes))
+
+
+def mesh_config(name: str) -> MeshConfig:
+    return {"single": SINGLE_POD, "multi": MULTI_POD, "tiny": TINY_MESH}[name]

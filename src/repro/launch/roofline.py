@@ -1,0 +1,233 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16/chip, 819 GB/s HBM, ~50 GB/s/link
+ICI. The compiled module from ``lowered.compile()`` is the per-device SPMD
+program, so ``cost_analysis()`` FLOPs/bytes are per-chip quantities:
+
+    compute term    = flops_per_chip / peak_flops
+    memory term     = hbm_bytes_per_chip / hbm_bw
+    collective term = link_bytes_per_chip / link_bw
+
+Collective bytes are NOT in cost_analysis; we parse the partitioned HLO and
+apply ring-algorithm multipliers per op (n = collective group size):
+    all-reduce        2 * (n-1)/n * result_bytes
+    all-gather            (n-1)/n * result_bytes
+    reduce-scatter        (n-1)   * result_bytes   (result is the shard)
+    all-to-all            (n-1)/n * result_bytes
+    collective-permute              result_bytes
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s / chip
+LINK_BW = 50e9            # bytes/s / link (ICI)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: dict = field(default_factory=dict)
+    count_by_op: dict = field(default_factory=dict)
+    link_bytes: float = 0.0     # per chip, ring-multiplier applied
+    raw_bytes: float = 0.0      # per chip, result sizes only
+
+
+def parse_collectives(hlo_text: str, num_devices: int) -> CollectiveStats:
+    stats = CollectiveStats()
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        # avoid double counting async start/done pairs: only count -start or
+        # the sync form; skip "-done" lines (their shape repeats the result)
+        if "-done(" in line:
+            continue
+        op = m.group(3)
+        shape_str = m.group(1) or m.group(2) or ""
+        size = _shape_bytes(shape_str)
+        n = _group_size(line, num_devices)
+        if n <= 1:
+            continue
+        mult = {
+            "all-reduce": 2.0 * (n - 1) / n,
+            "all-gather": (n - 1) / n,
+            "reduce-scatter": float(n - 1),
+            "all-to-all": (n - 1) / n,
+            "collective-permute": 1.0,
+        }[op]
+        stats.bytes_by_op[op] = stats.bytes_by_op.get(op, 0.0) + size * mult
+        stats.count_by_op[op] = stats.count_by_op.get(op, 0) + 1
+        stats.link_bytes += size * mult
+        stats.raw_bytes += size
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    link_bytes_per_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops_per_chip: float = 0.0
+    useful_flops_frac: float = 0.0
+    collectives: dict = field(default_factory=dict)
+
+    def as_dict(self):
+        return {
+            "flops_per_chip": self.flops_per_chip,
+            "hbm_bytes_per_chip": self.hbm_bytes_per_chip,
+            "link_bytes_per_chip": self.link_bytes_per_chip,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "model_flops_per_chip": self.model_flops_per_chip,
+            "useful_flops_frac": self.useful_flops_frac,
+            "collectives": self.collectives,
+        }
+
+
+def analyze(cost: dict, hlo_text: str, num_devices: int,
+            model_flops_total: float = 0.0) -> Roofline:
+    """Terms come from the trip-count-aware HLO walk (launch/hlo_cost.py);
+    XLA's own cost_analysis numbers ride along in the dry-run JSON for
+    comparison (they undercount scanned programs)."""
+    from repro.launch.hlo_cost import analyze_text
+    ct = analyze_text(hlo_text, num_devices)
+    flops, hbm = ct.flops, ct.bytes
+    terms = {
+        "compute": flops / PEAK_FLOPS,
+        "memory": hbm / HBM_BW,
+        "collective": ct.link_bytes / LINK_BW,
+    }
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops_total / num_devices
+    return Roofline(
+        flops_per_chip=flops,
+        hbm_bytes_per_chip=hbm,
+        link_bytes_per_chip=ct.link_bytes,
+        compute_s=terms["compute"],
+        memory_s=terms["memory"],
+        collective_s=terms["collective"],
+        bottleneck=bottleneck,
+        model_flops_per_chip=mf,
+        useful_flops_frac=(mf / flops) if flops else 0.0,
+        collectives={k: {"bytes": v, "count": ct.coll_count_by_op[k]}
+                     for k, v in ct.coll_bytes_by_op.items()},
+    )
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic 'useful' FLOPs for the cell: 6·N_active·T for training,
+    2·N_active·T for inference, + exact attention-score/V FLOPs."""
+    import numpy as np
+    from repro.core.partition import build_partition  # noqa: F401 (doc link)
+    n_active = active_params(cfg)
+    gb, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens, mult = gb * s, 6.0
+    elif shape.kind == "prefill":
+        tokens, mult = gb * s, 2.0
+    else:
+        tokens, mult = gb * 1, 2.0
+    base = mult * n_active * tokens
+    attn = attention_flops(cfg, shape)
+    return base + attn
+
+
+def active_params(cfg) -> float:
+    """Parameter count actually touched per token (MoE: top-k + shared)."""
+    import jax
+
+    from repro.models import registry
+    model = registry.get(cfg)
+    shapes = jax.eval_shape(lambda k: model.init(k, cfg), jax.random.PRNGKey(0))
+    total = 0.0
+    for pth, leaf in _leaves(shapes):
+        n = float(_size(leaf.shape))
+        if "/moe/" in f"/{pth}/" and "shared" not in pth and \
+                pth.split("/")[-1] in ("wg", "wu", "wd"):
+            n *= cfg.num_experts_per_tok / cfg.num_experts
+        total += n
+    return total
+
+
+def attention_flops(cfg, shape) -> float:
+    """Scores + AV FLOPs (2·B·H·Sq·Sk·(Dk+Dv) with causal 1/2 for train)."""
+    gb, s = shape.global_batch, shape.seq_len
+    if cfg.family == "ssm":
+        return 0.0
+    h = cfg.num_heads
+    if cfg.use_mla:
+        dk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        dv = cfg.v_head_dim
+    else:
+        dk = dv = cfg.head_dim
+    if cfg.family == "hybrid":
+        layers = cfg.num_layers // max(1, cfg.shared_attn_period)
+    elif cfg.family == "encdec":
+        layers = cfg.num_layers + cfg.num_encoder_layers
+    else:
+        layers = cfg.num_layers
+    if shape.kind == "train":
+        per = 2 * gb * h * s * s * (dk + dv) * 0.5 * 3  # fwd+bwd(2x), causal
+    elif shape.kind == "prefill":
+        per = 2 * gb * h * s * s * (dk + dv) * 0.5
+    else:
+        per = 2 * gb * h * 1 * s * (dk + dv)
+    return per * layers
+
+
+def _leaves(tree):
+    from repro.utils.trees import tree_leaves_with_path
+    return tree_leaves_with_path(tree)
+
+
+def _size(shape) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n

@@ -1,0 +1,158 @@
+"""ShapeDtypeStruct stand-ins + shardings for every dry-run cell.
+
+``input_specs(cfg, shape, mesh)`` returns (args, kind) where args are SDS
+pytrees with NamedShardings attached — weak-type-correct, shardable, zero
+allocation. For decode cells the KV/SSM cache specs implement the SP rules:
+batch over ("pod","data") when divisible, kv-heads over "model" when
+divisible, otherwise cache *sequence* over the spare axes.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as shard_rules
+from repro.models import registry
+from repro.utils.trees import tree_map_with_path
+
+
+def _axes_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _sds(shape, dtype, mesh, spec: P):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def batch_dims(cfg: ModelConfig, shape: ShapeConfig):
+    """Token-batch geometry for a cell. For vlm, seq_len counts the image
+    prefix; for encdec, src length = seq_len // frontend_len_ratio."""
+    gb, s = shape.global_batch, shape.seq_len
+    if cfg.family == "vlm":
+        return gb, s - cfg.num_frontend_tokens
+    return gb, s
+
+
+def data_batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> dict:
+    sizes = _axes_sizes(mesh)
+    baxes = shard_rules.batch_axes_of(mesh)
+    bdim = baxes if shape.global_batch % _prod(sizes, baxes) == 0 else None
+    gb, s = batch_dims(cfg, shape)
+    dt = jnp.dtype(cfg.dtype)
+    out = {}
+    if shape.kind == "train":
+        out["tokens"] = _sds((gb, s), jnp.int32, mesh, P(bdim, None))
+        out["loss_mask"] = _sds((gb, s), jnp.float32, mesh, P(bdim, None))
+    elif shape.kind == "prefill":
+        out["tokens"] = _sds((gb, s), jnp.int32, mesh, P(bdim, None))
+    else:  # decode: one new token
+        out["tokens"] = _sds((gb, 1), jnp.int32, mesh, P(bdim, None))
+    if cfg.family == "vlm" and shape.kind != "decode":
+        out["patch_embeds"] = _sds((gb, cfg.num_frontend_tokens, cfg.d_model),
+                                   dt, mesh, P(bdim, None, None))
+    if cfg.family == "encdec" and shape.kind != "decode":
+        out["src_embeds"] = _sds((gb, shape.seq_len // cfg.frontend_len_ratio,
+                                  cfg.d_model), dt, mesh, P(bdim, None, None))
+    return out
+
+
+def _prod(sizes: dict, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= sizes[a]
+    return n
+
+
+def cache_spec_for(cfg: ModelConfig, mesh, batch: int, path: str,
+                   shape: tuple) -> P:
+    """Sharding rule for one cache leaf (see module docstring)."""
+    sizes = _axes_sizes(mesh)
+    baxes = shard_rules.batch_axes_of(mesh)
+    m = sizes["model"]
+    b_ok = batch % _prod(sizes, baxes) == 0
+    bdim = baxes if b_ok else None
+    leaf = path.split("/")[-1]
+    if leaf == "pos":
+        return P()
+    if leaf in ("k", "v", "ak", "av", "ck", "cv"):
+        # [L, B, S, KVH, Dh]
+        kvh = shape[3]
+        if kvh % m == 0:
+            return P(None, bdim, None, "model", None)
+        seq_axes = ("model",) if b_ok else tuple([*baxes, "model"])
+        return P(None, bdim, seq_axes, None, None)
+    if leaf in ("ckv", "kpe"):
+        # MLA latent [L, B, S, r] — shard S over model (+ batch axes if B=1)
+        seq_axes = ("model",) if b_ok else tuple([*baxes, "model"])
+        return P(None, bdim, seq_axes, None)
+    if leaf in ("x", "b", "c"):      # conv windows [L, B, K-1, C]
+        return P(None, bdim, None, "model")
+    if leaf == "state":              # SSM state [L, B, H, P, N]
+        h = shape[2]
+        return P(None, bdim, "model" if h % m == 0 else None, None, None)
+    return P()
+
+
+def cache_specs(cfg: ModelConfig, mesh, batch: int, max_len: int):
+    model = registry.get(cfg)
+    shapes = jax.eval_shape(partial(model.init_cache, cfg, batch, max_len))
+    return tree_map_with_path(
+        lambda path, leaf: jax.ShapeDtypeStruct(
+            leaf.shape, leaf.dtype,
+            sharding=NamedSharding(mesh, cache_spec_for(cfg, mesh, batch,
+                                                        path, leaf.shape))),
+        shapes)
+
+
+def params_sds(cfg: ModelConfig, mesh, seed: int = 0):
+    model = registry.get(cfg)
+    shapes = jax.eval_shape(lambda k: model.init(k, cfg),
+                            jax.random.PRNGKey(seed))
+    specs = shard_rules.param_specs(cfg, shapes, mesh)
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    return shard_rules.sds_with_sharding(shapes, shardings), specs
+
+
+def train_state_sds(cfg: ModelConfig, mesh, opt_offload: str = "none",
+                    moment_dtype=None):
+    """SDS + shardings for the full TrainState. Moments follow the params'
+    specs, optionally ZeRO-1 resharded or host-offloaded (DESIGN 3.2)."""
+    from repro.train import step as step_mod
+    moment_dtype = jnp.dtype(moment_dtype or jnp.float32)
+    shapes = step_mod.train_state_shapes(cfg)
+    p_sds, p_specs = params_sds(cfg, mesh)
+
+    def rep(leaf):  # replicated small state
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=NamedSharding(mesh, P()))
+
+    m_specs = p_specs
+    if opt_offload == "zero1":
+        m_specs = shard_rules.apply_zero1(p_specs, shapes["params"], mesh)
+    kind = ("pinned_host"
+            if opt_offload == "host" and jax.default_backend() in ("tpu", "gpu")
+            else None)
+
+    def moment_sds(leaf, spec):
+        if kind:
+            sh = NamedSharding(mesh, spec, memory_kind=kind)
+        else:
+            sh = NamedSharding(mesh, spec)
+        return jax.ShapeDtypeStruct(leaf.shape, moment_dtype, sharding=sh)
+
+    state = {
+        "params": p_sds,
+        "opt": {
+            "m": jax.tree.map(moment_sds, shapes["opt"]["m"], m_specs),
+            "v": jax.tree.map(moment_sds, shapes["opt"]["v"], m_specs),
+            "counts": rep(shapes["opt"]["counts"]),
+        },
+        "sel": jax.tree.map(rep, shapes["sel"]),
+        "step": rep(shapes["step"]),
+    }
+    return state

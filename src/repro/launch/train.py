@@ -1,0 +1,84 @@
+"""Training launcher.
+
+CPU-scale (runs here):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-0.5b --smoke \
+      --method adagradselect --k 20 --steps 200
+
+Production (TPU pod; same code, mesh from --mesh):
+  python -m repro.launch.train --arch qwen2.5-32b --mesh single \
+      --steps 10000 --checkpoint-dir gs://.../ckpts
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-runnable)")
+    ap.add_argument("--method", default="adagradselect",
+                    choices=["adagradselect", "topk_grad", "random", "all", "lora"])
+    ap.add_argument("--k", type=float, default=20.0, help="k%% blocks per step")
+    ap.add_argument("--lora-rank", type=int, default=128)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--global-batch", type=int, default=32)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--offload", default="none", choices=["none", "host", "zero1"])
+    ap.add_argument("--mesh", default=None, choices=[None, "single", "multi"],
+                    help="distributed mesh (requires real devices)")
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--eval-every", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.configs.base import OptimizerConfig, SelectConfig, TrainConfig
+
+    mcfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    tcfg = TrainConfig(
+        model=mcfg,
+        select=SelectConfig(policy=args.method if args.method != "lora" else "all",
+                            k_percent=args.k,
+                            steps_per_epoch=max(1, args.steps // 4)),
+        optimizer=OptimizerConfig(lr=args.lr, total_steps=args.steps,
+                                  offload=args.offload,
+                                  lora_rank=args.lora_rank),
+        seq_len=args.seq_len, global_batch=args.global_batch,
+        steps=args.steps, seed=args.seed,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every)
+
+    mesh = None
+    batch_axes = ("data",)
+    if args.mesh:
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+        batch_axes = tuple(a for a in mesh.axis_names if a != "model")
+
+    from repro.train.trainer import Trainer
+    trainer = Trainer(tcfg, mesh=mesh, batch_axes=batch_axes, method=args.method)
+    start = trainer.maybe_restore()
+    if start:
+        print(f"resumed from step {start}")
+    log = trainer.train()
+    print(f"final loss: {log.losses[-1]:.4f}  "
+          f"mean step time: {np.mean(log.step_times[3:]):.3f}s")
+    if args.eval_every or True:
+        pass
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"losses": log.losses, "step_times": log.step_times,
+                       "metrics": log.metrics}, f)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

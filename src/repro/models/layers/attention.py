@@ -1,0 +1,124 @@
+"""GQA/MHA attention layer with RoPE, optional QKV bias, KV caching."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import attention_core as core
+from repro.models.layers.rope import apply_rope
+
+
+def init(key: jax.Array, cfg: ModelConfig) -> dict:
+    """Q-heads are padded to cfg.padded_heads for TP alignment (NamedSharding
+    needs exact divisibility). Padded heads are zero-MASKED at the attention
+    output, so their weights receive zero gradient and the function is
+    exactly the unpadded model (see _head_mask)."""
+    d, kvh, dh = cfg.d_model, cfg.num_kv_heads, cfg.head_dim
+    hp = cfg.padded_heads
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    sc = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, hp, dh)) * sc).astype(dt),
+        "wk": (jax.random.normal(ks[1], (d, kvh, dh)) * sc).astype(dt),
+        "wv": (jax.random.normal(ks[2], (d, kvh, dh)) * sc).astype(dt),
+        "wo": (jax.random.normal(ks[3], (hp, dh, d)) * sc).astype(dt),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((hp, dh), dt)
+        p["bk"] = jnp.zeros((kvh, dh), dt)
+        p["bv"] = jnp.zeros((kvh, dh), dt)
+    return p
+
+
+def _head_mask(cfg: ModelConfig, dtype):
+    hp = cfg.padded_heads
+    if hp == cfg.num_heads:
+        return None
+    return (jnp.arange(hp) < cfg.num_heads).astype(dtype)[None, None, :, None]
+
+
+def _hmap(cfg: ModelConfig):
+    import numpy as np
+    rep = max(1, cfg.num_heads // cfg.num_kv_heads)
+    return np.minimum(np.arange(cfg.padded_heads) // rep,
+                      cfg.num_kv_heads - 1)
+
+
+def _project_qkv(params, cfg: ModelConfig, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.attn_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if cfg.seq_shard_kv and x.shape[1] > 1:
+        # replicated-kv fallback: force k/v sequence-sharded so GSPMD lowers
+        # the projection to a local matmul + (cheap bf16) all-gather in the
+        # attention einsum, instead of split-contraction + f32 all-reduce
+        from jax.sharding import PartitionSpec as P
+        try:
+            k = jax.lax.with_sharding_constraint(k, P(None, "model", None, None))
+            v = jax.lax.with_sharding_constraint(v, P(None, "model", None, None))
+        except (ValueError, RuntimeError):
+            pass  # no mesh context (single-device tests)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.partial_rotary_factor)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.partial_rotary_factor)
+    return q, k, v
+
+
+def apply(params: dict, cfg: ModelConfig, x: jax.Array, *, positions=None,
+          prefix_len: int = 0, chunk_q: int = 512) -> jax.Array:
+    """Training/prefill forward (causal). x: [B, S, D] -> [B, S, D]."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    out = core.chunked_attention(q, k, v, hmap=_hmap(cfg), chunk_q=chunk_q,
+                                 causal=True, prefix_len=prefix_len,
+                                 softcap=cfg.attn_logit_softcap)
+    out = out.astype(x.dtype)
+    hm = _head_mask(cfg, out.dtype)
+    if hm is not None:
+        out = out * hm
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def apply_prefill(params, cfg: ModelConfig, x, *, prefix_len: int = 0,
+                  chunk_q: int = 512, cache_len: int = 0):
+    """Like apply() but also returns (k, v) padded to cache_len for the cache."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    out = core.chunked_attention(q, k, v, hmap=_hmap(cfg), chunk_q=chunk_q,
+                                 causal=True, prefix_len=prefix_len,
+                                 softcap=cfg.attn_logit_softcap)
+    out = out.astype(x.dtype)
+    hm = _head_mask(cfg, out.dtype)
+    if hm is not None:
+        out = out * hm
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    if cache_len and cache_len > s:
+        pad = [(0, 0), (0, cache_len - s), (0, 0), (0, 0)]
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    return out, (k, v)
+
+
+def apply_decode(params, cfg: ModelConfig, x, k_cache, v_cache, pos):
+    """One-token decode. x: [B, 1, D]; caches [B, Smax, KVH, Dh]; pos: scalar
+    index of the new token. Returns (out [B,1,D], new_k, new_v)."""
+    positions = jnp.full((x.shape[0], 1), pos, dtype=jnp.int32)
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), pos, axis=1)
+    out = core.decode_attention(q, k_cache, v_cache, pos + 1,
+                                hmap=_hmap(cfg),
+                                softcap=cfg.attn_logit_softcap)
+    out = out.astype(x.dtype)
+    hm = _head_mask(cfg, out.dtype)
+    if hm is not None:
+        out = out * hm
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return out, k_cache, v_cache

@@ -1,0 +1,128 @@
+"""Multi-head Latent Attention (deepseek-v3).
+
+Training/prefill use the *naive* expansion (latent -> per-head K/V, exact);
+decode uses the *absorbed* form that attends directly in latent space, so the
+KV cache is only [B, S, kv_lora_rank + qk_rope_head_dim] per layer — the
+property that makes long-context decode cheap for this family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import attention_core as core
+from repro.models.layers import norms
+from repro.models.layers.rope import apply_rope
+
+
+def dims(cfg: ModelConfig):
+    return (cfg.q_lora_rank, cfg.kv_lora_rank, cfg.qk_nope_head_dim,
+            cfg.qk_rope_head_dim, cfg.v_head_dim)
+
+
+def init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    qr, kvr, nd, rd, vd = dims(cfg)
+    ks = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.dtype)
+
+    def w(k, shape, fan_in):
+        return (jax.random.normal(k, shape) * fan_in**-0.5).astype(dt)
+
+    p = {
+        "wq_a": w(ks[0], (d, qr), d),
+        "q_norm": norms.init(qr, dt),
+        "wq_b": w(ks[1], (qr, h, nd + rd), qr),
+        "wkv_a": w(ks[2], (d, kvr + rd), d),
+        "kv_norm": norms.init(kvr, dt),
+        "wk_b": w(ks[3], (kvr, h, nd), kvr),   # latent -> per-head K_nope
+        "wv_b": w(ks[4], (kvr, h, vd), kvr),   # latent -> per-head V
+        "wo": w(ks[5], (h, vd, d), h * vd),
+    }
+    return p
+
+
+def _q_proj(params, cfg, x, positions):
+    """-> q_nope [B,S,H,nd], q_pe [B,S,H,rd]"""
+    qr, kvr, nd, rd, vd = dims(cfg)
+    cq = norms.apply(params["q_norm"], x @ params["wq_a"], cfg.norm_eps)
+    q = jnp.einsum("bsq,qhk->bshk", cq, params["wq_b"])
+    q_nope, q_pe = q[..., :nd], q[..., nd:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+    return q_nope, q_pe
+
+
+def _kv_latent(params, cfg, x, positions):
+    """-> c_kv [B,S,kvr] (normed), k_pe [B,S,1,rd] (roped, head-shared)."""
+    qr, kvr, nd, rd, vd = dims(cfg)
+    kv = x @ params["wkv_a"]
+    c_kv, k_pe = kv[..., :kvr], kv[..., kvr:]
+    c_kv = norms.apply(params["kv_norm"], c_kv, cfg.norm_eps)
+    k_pe = apply_rope(k_pe[:, :, None, :], positions, cfg.rope_theta)
+    return c_kv, k_pe
+
+
+def apply(params: dict, cfg: ModelConfig, x: jax.Array, *, positions=None,
+          chunk_q: int = 512) -> jax.Array:
+    """Training/prefill: naive expansion, exact attention. [B,S,D]->[B,S,D]."""
+    b, s, _ = x.shape
+    qr, kvr, nd, rd, vd = dims(cfg)
+    if positions is None:
+        positions = jnp.arange(s)
+    q_nope, q_pe = _q_proj(params, cfg, x, positions)
+    c_kv, k_pe = _kv_latent(params, cfg, x, positions)
+    k_nope = jnp.einsum("bsc,chk->bshk", c_kv, params["wk_b"])
+    v = jnp.einsum("bsc,chk->bshk", c_kv, params["wv_b"])
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe, (b, s, cfg.num_heads, rd))], axis=-1)
+    # chunked_attention scales by q.shape[-1]**-0.5 == (nd+rd)**-0.5 itself.
+    out = core.chunked_attention(q, k, v, chunk_q=chunk_q, causal=True)
+    return jnp.einsum("bshv,hvd->bsd", out.astype(x.dtype), params["wo"])
+
+
+def apply_prefill(params, cfg, x, *, chunk_q: int = 512, cache_len: int = 0):
+    """Prefill returning the latent cache (c_kv, k_pe)."""
+    b, s, _ = x.shape
+    out = apply(params, cfg, x, chunk_q=chunk_q)
+    c_kv, k_pe = _kv_latent(params, cfg, x, jnp.arange(s))
+    k_pe = k_pe[:, :, 0, :]
+    if cache_len and cache_len > s:
+        c_kv = jnp.pad(c_kv, [(0, 0), (0, cache_len - s), (0, 0)])
+        k_pe = jnp.pad(k_pe, [(0, 0), (0, cache_len - s), (0, 0)])
+    return out, (c_kv, k_pe)
+
+
+def apply_decode(params, cfg: ModelConfig, x, ckv_cache, kpe_cache, pos):
+    """Absorbed-form decode. x [B,1,D]; ckv_cache [B,Smax,kvr];
+    kpe_cache [B,Smax,rd]. Scores computed in latent space:
+      score = q_nope @ Wk_b^T · c_kv + q_pe · k_pe
+      out   = (probs @ c_kv) @ Wv_b  (then Wo)
+    Per-token cost is O(S·(kvr+rd)·H) instead of O(S·H·(nd+rd)) with a
+    materialized per-head cache ~9x larger.
+    """
+    b = x.shape[0]
+    qr, kvr, nd, rd, vd = dims(cfg)
+    h = cfg.num_heads
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q_nope, q_pe = _q_proj(params, cfg, x, positions)          # [B,1,H,nd],[B,1,H,rd]
+    c_new, kpe_new = _kv_latent(params, cfg, x, positions)     # [B,1,kvr],[B,1,1,rd]
+    ckv_cache = jax.lax.dynamic_update_slice_in_dim(
+        ckv_cache, c_new.astype(ckv_cache.dtype), pos, axis=1)
+    kpe_cache = jax.lax.dynamic_update_slice_in_dim(
+        kpe_cache, kpe_new[:, :, 0, :].astype(kpe_cache.dtype), pos, axis=1)
+    # absorb: q_lat [B,1,H,kvr]
+    q_lat = jnp.einsum("bshn,chn->bshc", q_nope, params["wk_b"])
+    smax = ckv_cache.shape[1]
+    scale = (nd + rd) ** -0.5
+    scores = (jnp.einsum("bshc,btc->bhst", q_lat.astype(jnp.float32),
+                         ckv_cache.astype(jnp.float32))
+              + jnp.einsum("bshr,btr->bhst", q_pe.astype(jnp.float32),
+                           kpe_cache.astype(jnp.float32))) * scale
+    valid = (jnp.arange(smax) <= pos)[None, None, None, :]
+    scores = jnp.where(valid, scores, core.NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)                    # [B,H,1,Smax]
+    o_lat = jnp.einsum("bhst,btc->bshc", probs, ckv_cache.astype(jnp.float32))
+    out = jnp.einsum("bshc,chv->bshv", o_lat, params["wv_b"].astype(jnp.float32))
+    out = jnp.einsum("bshv,hvd->bsd", out.astype(x.dtype), params["wo"])
+    return out, ckv_cache, kpe_cache

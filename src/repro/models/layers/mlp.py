@@ -1,0 +1,26 @@
+"""Gated (SwiGLU/GeGLU) feed-forward layer — the U/G/D projections LoRA targets."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def init(key: jax.Array, d_model: int, d_ff: int, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "wg": (jax.random.normal(ks[0], (d_model, d_ff)) * d_model**-0.5).astype(dt),
+        "wu": (jax.random.normal(ks[1], (d_model, d_ff)) * d_model**-0.5).astype(dt),
+        "wd": (jax.random.normal(ks[2], (d_ff, d_model)) * d_ff**-0.5).astype(dt),
+    }
+
+
+def apply(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    h = _act(cfg.act)(x @ params["wg"]) * (x @ params["wu"])
+    return h @ params["wd"]

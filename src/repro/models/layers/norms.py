@@ -1,0 +1,16 @@
+"""RMSNorm (f32 statistics, cast back to input dtype)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def apply(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,36 @@
+"""Rotary position embeddings with partial-rotary support (chatglm '2d RoPE')."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rotary_angles(positions: jax.Array, dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions [*P] -> (cos, sin) each [*P, dim//2] in f32."""
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq  # [*P, dim//2]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               partial_factor: float = 1.0) -> jax.Array:
+    """x: [B, S, H, Dh]; positions: [B, S] or [S]. Rotates the first
+    ``partial_factor * Dh`` dims (interleaved-pair convention), passes the
+    rest through unchanged."""
+    dh = x.shape[-1]
+    rot = int(dh * partial_factor)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    cos, sin = rotary_angles(positions, rot, theta)          # [B, S, rot//2]
+    cos = cos[:, :, None, :]                                  # [B, S, 1, rot//2]
+    sin = sin[:, :, None, :]
+    xf = x_rot.astype(jnp.float32)
+    x1, x2 = xf[..., 0::2], xf[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.stack([r1, r2], axis=-1).reshape(x_rot.shape).astype(x.dtype)
+    return jnp.concatenate([out, x_pass], axis=-1) if rot < dh else out

@@ -1,0 +1,199 @@
+"""Mamba2 block (SSD — state-space duality), chunked-scan implementation.
+
+The SSD computation follows the minimal discrete form of arXiv:2405.21060:
+within-chunk quadratic (attention-like) term + inter-chunk linear recurrence,
+scanned over chunks so the [B, H, Q, Q] score tensor for only one chunk is
+live at a time. All SSD math in f32.
+
+Projections are SPLIT (z / x / B / C / dt instead of one fused in_proj) so
+every channel dimension shards cleanly over the mesh ``model`` axis and the
+x-channel sharding aligns with SSD head boundaries (heads_per_shard * P
+channels per shard) — a fused projection would put the z/xBC/dt split points
+inside shards and force resharding collectives (see distributed/sharding.py).
+
+Decode keeps O(1) state per layer: conv windows [B, K-1, channels] per
+conv'd stream and SSM state [B, H, P, N].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import norms
+
+
+def dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    gn = cfg.ssm_ngroups * cfg.ssm_state
+    return d_inner, nheads, gn
+
+
+def init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_inner, nheads, gn = dims(cfg)
+    ks = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.dtype)
+
+    def w(k, shape, fan_in):
+        return (jax.random.normal(k, shape) * fan_in**-0.5).astype(dt)
+
+    return {
+        "proj_z": w(ks[0], (d, d_inner), d),
+        "proj_x": w(ks[1], (d, d_inner), d),
+        "proj_b": w(ks[2], (d, gn), d),
+        "proj_c": w(ks[3], (d, gn), d),
+        "proj_dt": w(ks[4], (d, nheads), d),
+        "conv_x": (jax.random.normal(ks[5], (cfg.ssm_conv, d_inner)) * 0.1).astype(dt),
+        "conv_b_mat": (jax.random.normal(ks[6], (cfg.ssm_conv, gn)) * 0.1).astype(dt),
+        "conv_c_mat": (jax.random.normal(ks[7], (cfg.ssm_conv, gn)) * 0.1).astype(dt),
+        "cbias_x": jnp.zeros((d_inner,), dt),
+        "cbias_b": jnp.zeros((gn,), dt),
+        "cbias_c": jnp.zeros((gn,), dt),
+        "A_log": jnp.log(jnp.arange(1, nheads + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.exp(
+            jax.random.uniform(jax.random.fold_in(key, 99), (nheads,),
+                               jnp.float32, jnp.log(1e-3), jnp.log(1e-1))))),
+        "norm": norms.init(d_inner, dt),
+        "out_proj": w(jax.random.fold_in(key, 100), (d_inner, d), d_inner),
+    }
+
+
+def _causal_conv(x, conv_w, conv_b):
+    """Depthwise causal conv + SiLU. x [B, S, C]; conv_w [K, C]."""
+    k = conv_w.shape[0]
+    pad = jnp.pad(x, [(0, 0), (k - 1, 0), (0, 0)])
+    out = sum(pad[:, i:i + x.shape[1], :] * conv_w[i] for i in range(k))
+    return jax.nn.silu(out + conv_b)
+
+
+def _expand_groups(m, nheads, g):
+    """[.., G, N] -> [.., H, N] by repeating each group H//G times."""
+    if g == 1:
+        return jnp.broadcast_to(m, (*m.shape[:-2], nheads, m.shape[-1]))
+    return jnp.repeat(m, nheads // g, axis=-2)
+
+
+def ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int, initial_state=None):
+    """SSD scan. x [B,S,H,P] (f32), dt [B,S,H], a [H] (negative),
+    b_mat/c_mat [B,S,H,N]. Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    u = x * dt[..., None]                      # [B,S,H,P]
+    adt = a[None, None, :] * dt                # [B,S,H]
+
+    def resh(t):
+        return t.reshape(bsz, nc, chunk, *t.shape[2:]).transpose(
+            1, 0, 2, *range(3, t.ndim + 1))    # [NC, B, Q, ...]
+
+    u_c, adt_c, b_c, c_c = map(resh, (u, adt, b_mat, c_mat))
+    s0 = (jnp.zeros((bsz, h, p, n), jnp.float32)
+          if initial_state is None else initial_state)
+
+    def body(state, args):
+        uq, aq, bq, cq = args                  # [B,Q,H,P], [B,Q,H], [B,Q,H,N] x2
+        cum = jnp.cumsum(aq, axis=1)           # [B,Q,H]
+        cum_last = cum[:, -1]                  # [B,H]
+        # within-chunk decay L[i,j] = exp(cum_i - cum_j), i >= j
+        diff = cum[:, :, None, :] - cum[:, None, :, :]   # [B,Qi,Qj,H]
+        q = aq.shape[1]
+        tri = jnp.tril(jnp.ones((q, q), bool))
+        l_mat = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+        scores = jnp.einsum("bihn,bjhn->bijh", cq, bq)
+        y_diag = jnp.einsum("bijh,bjhp->bihp", scores * l_mat, uq)
+        # contribution of the incoming state
+        decay_in = jnp.exp(cum)                # [B,Q,H]
+        y_off = jnp.einsum("bihn,bhpn,bih->bihp", cq, state, decay_in)
+        # this chunk's contribution to the state
+        decay_out = jnp.exp(cum_last[:, None] - cum)  # [B,Q,H]
+        chunk_state = jnp.einsum("bjhn,bjh,bjhp->bhpn", bq, decay_out, uq)
+        new_state = jnp.exp(cum_last)[..., None, None] * state + chunk_state
+        return new_state, y_diag + y_off
+
+    final_state, ys = jax.lax.scan(body, s0, (u_c, adt_c, b_c, c_c))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, s, h, p)
+    return y, final_state
+
+
+def _project(params, cfg: ModelConfig, x):
+    d_inner, nheads, gn = dims(cfg)
+    z = x @ params["proj_z"]
+    xr = x @ params["proj_x"]
+    br = x @ params["proj_b"]
+    cr = x @ params["proj_c"]
+    dt_raw = x @ params["proj_dt"]
+    return z, xr, br, cr, dt_raw
+
+
+def apply(params: dict, cfg: ModelConfig, x: jax.Array,
+          return_state: bool = False):
+    """Training/prefill forward. x [B, S, D] -> [B, S, D]
+    (+ (conv_state {x,b,c}, ssm_state) if return_state)."""
+    bsz, s, d = x.shape
+    d_inner, nheads, gn = dims(cfg)
+    z, xr, br, cr, dt_raw = _project(params, cfg, x)
+    xc = _causal_conv(xr, params["conv_x"], params["cbias_x"])
+    bc = _causal_conv(br, params["conv_b_mat"], params["cbias_b"])
+    cc = _causal_conv(cr, params["conv_c_mat"], params["cbias_c"])
+    xs = xc.reshape(bsz, s, nheads, cfg.ssm_head_dim)
+    b_mat = bc.reshape(bsz, s, cfg.ssm_ngroups, cfg.ssm_state)
+    c_mat = cc.reshape(bsz, s, cfg.ssm_ngroups, cfg.ssm_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])
+    b_h = _expand_groups(b_mat, nheads, cfg.ssm_ngroups).astype(jnp.float32)
+    c_h = _expand_groups(c_mat, nheads, cfg.ssm_ngroups).astype(jnp.float32)
+    chunk = min(cfg.ssm_chunk, s)
+    y, final_state = ssd_chunked(xs.astype(jnp.float32), dt, a, b_h, c_h, chunk)
+    y = y + xs.astype(jnp.float32) * params["D"][None, None, :, None]
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+    y = norms.apply(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ params["out_proj"]
+    if not return_state:
+        return out
+    km1 = cfg.ssm_conv - 1
+    conv_state = {
+        "x": xr[:, s - km1:, :].astype(x.dtype),
+        "b": br[:, s - km1:, :].astype(x.dtype),
+        "c": cr[:, s - km1:, :].astype(x.dtype),
+    }
+    return out, (conv_state, final_state)
+
+
+def _conv_step(window, new, conv_w, conv_b):
+    """window [B, K-1, C]; new [B, 1, C] -> (act [B, C], new window)."""
+    w = jnp.concatenate([window, new.astype(window.dtype)], axis=1)
+    out = jnp.einsum("bkc,kc->bc", w.astype(jnp.float32),
+                     conv_w.astype(jnp.float32))
+    return jax.nn.silu(out + conv_b.astype(jnp.float32)), w[:, 1:, :]
+
+
+def apply_decode(params: dict, cfg: ModelConfig, x, conv_state, ssm_state):
+    """One-token step. x [B, 1, D]; conv_state {x,b,c}: [B, K-1, C];
+    ssm_state [B, H, P, N] (f32). Returns (out, conv_state, ssm_state)."""
+    bsz = x.shape[0]
+    d_inner, nheads, gn = dims(cfg)
+    z, xr, br, cr, dt_raw = _project(params, cfg, x)
+    xa, wx = _conv_step(conv_state["x"], xr, params["conv_x"], params["cbias_x"])
+    ba, wb = _conv_step(conv_state["b"], br, params["conv_b_mat"], params["cbias_b"])
+    ca, wc = _conv_step(conv_state["c"], cr, params["conv_c_mat"], params["cbias_c"])
+    xs = xa.reshape(bsz, nheads, cfg.ssm_head_dim)
+    b_mat = ba.reshape(bsz, cfg.ssm_ngroups, cfg.ssm_state)
+    c_mat = ca.reshape(bsz, cfg.ssm_ngroups, cfg.ssm_state)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])
+    b_h = _expand_groups(b_mat, nheads, cfg.ssm_ngroups)
+    c_h = _expand_groups(c_mat, nheads, cfg.ssm_ngroups)
+    da = jnp.exp(a[None] * dt)                                # [B,H]
+    new_state = (ssm_state * da[..., None, None]
+                 + jnp.einsum("bh,bhn,bhp->bhpn", dt, b_h, xs))
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, c_h)
+    y = y + xs * params["D"][None, :, None]
+    y = y.reshape(bsz, 1, d_inner).astype(x.dtype)
+    y = norms.apply(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ params["out_proj"]
+    return out, {"x": wx, "b": wb, "c": wc}, new_state

@@ -1,0 +1,10 @@
+"""Family -> model module dispatch. All modules expose the same API
+(init, apply_train, init_cache, prefill, decode_step)."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, lm
+
+
+def get(cfg: ModelConfig):
+    return encdec if cfg.family == "encdec" else lm

@@ -1,0 +1,32 @@
+"""Reference (unmasked) AdamW — used by the LoRA baseline and as the oracle
+the masked optimizer is tested against."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+def init_opt_state(params) -> dict:
+    z = lambda p: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p)  # noqa: E731
+    return {"m": z(params), "v": z(params), "count": jnp.zeros((), jnp.float32)}
+
+
+def update(cfg: OptimizerConfig, params, grads, opt_state, lr):
+    c = opt_state["count"] + 1.0
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m2 = cfg.b1 * m + (1 - cfg.b1) * gf
+        v2 = cfg.b2 * v + (1 - cfg.b2) * gf * gf
+        mhat = m2 / (1 - cfg.b1 ** c)
+        vhat = v2 / (1 - cfg.b2 ** c)
+        pf = p.astype(jnp.float32)
+        p2 = pf - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * pf)
+        return p2.astype(p.dtype), m2, v2
+
+    flat = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    tup = lambda i: jax.tree.map(lambda t: t[i], flat,  # noqa: E731
+                                 is_leaf=lambda t: isinstance(t, tuple))
+    return tup(0), {"m": tup(1), "v": tup(2), "count": c}

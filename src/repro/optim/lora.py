@@ -1,0 +1,82 @@
+"""LoRA baseline (paper §4.2): rank-r adapters on the Q, K, V, O, G, U, D
+projections, trained with standard AdamW while base weights stay frozen.
+
+Adapters are kept in a FLAT dict keyed by canonical leaf path (a valid jax
+pytree), mirroring the stacked-params layout: a target leaf of shape
+[L, in..., out...] gets a: [L, fan_in, r] and b: [L, r, fan_out] (leading L
+only for stacked groups), merged on the forward as
+    w_eff = w + (alpha / r) * reshape(a @ b).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.utils.trees import tree_leaves_with_path, tree_map_with_path
+
+# leaf basenames LoRA targets (paper: Q, K, V, O, U, D, G projections)
+TARGETS = ("wq", "wk", "wv", "wo", "wg", "wu", "wd")
+# leaves whose fan-in spans all axes but the last (o-proj style)
+_SPLIT_LAST = ("wo",)
+
+
+def _is_target(path: str) -> bool:
+    return path.split("/")[-1] in TARGETS
+
+
+def _is_stacked(path: str) -> bool:
+    return path.split("/")[0].endswith("layers")
+
+
+def _fan_split(path: str, shape: tuple, stacked: bool):
+    core = shape[1:] if stacked else shape
+    base = path.split("/")[-1]
+    if base in _SPLIT_LAST:
+        return int(math.prod(core[:-1])), int(core[-1])
+    return int(core[0]), int(math.prod(core[1:]))
+
+
+def init_lora(key: jax.Array, params: dict, cfg: ModelConfig, rank: int) -> dict:
+    """-> flat dict {leaf_path: {"a": ..., "b": ...}} for targeted leaves."""
+    out = {}
+    for path, leaf in tree_leaves_with_path(params):
+        if not _is_target(path) or leaf.ndim < 2:
+            continue
+        stacked = _is_stacked(path)
+        fan_in, fan_out = _fan_split(path, leaf.shape, stacked)
+        k = jax.random.fold_in(key, abs(hash(path)) % (2**31))
+        shape_a = (leaf.shape[0], fan_in, rank) if stacked else (fan_in, rank)
+        shape_b = (leaf.shape[0], rank, fan_out) if stacked else (rank, fan_out)
+        out[path] = {
+            "a": (jax.random.normal(k, shape_a) * fan_in**-0.5).astype(leaf.dtype),
+            "b": jnp.zeros(shape_b, leaf.dtype),
+        }
+    return out
+
+
+def merge(params: dict, lora_params: dict, cfg: ModelConfig,
+          rank: int, alpha: float) -> dict:
+    """w_eff = w + scale * a@b for targeted leaves; others pass through.
+    Differentiable wrt lora_params only (base is stop_gradient-ed)."""
+    scale = alpha / rank
+
+    def one(path, w):
+        w = jax.lax.stop_gradient(w)
+        ab = lora_params.get(path)
+        if ab is None:
+            return w
+        a, b = ab["a"], ab["b"]
+        if a.ndim == 3:  # stacked
+            delta = jnp.einsum("lir,lro->lio", a, b).reshape(w.shape)
+        else:
+            delta = (a @ b).reshape(w.shape)
+        return w + (scale * delta).astype(w.dtype)
+
+    return tree_map_with_path(one, params)
+
+
+def num_lora_params(lora_params) -> int:
+    return sum(int(jnp.size(x)) for x in jax.tree.leaves(lora_params))

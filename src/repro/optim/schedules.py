@@ -1,0 +1,24 @@
+"""Learning-rate schedules (pure functions of the step, jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+def learning_rate(cfg: OptimizerConfig, step) -> jnp.ndarray:
+    t = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, (t + 1) / max(1, cfg.warmup_steps))
+    if cfg.schedule == "constant":
+        factor = 1.0
+    elif cfg.schedule == "linear":
+        frac = jnp.clip((t - cfg.warmup_steps)
+                        / max(1, cfg.total_steps - cfg.warmup_steps), 0, 1)
+        factor = 1.0 - frac
+    elif cfg.schedule == "cosine":
+        frac = jnp.clip((t - cfg.warmup_steps)
+                        / max(1, cfg.total_steps - cfg.warmup_steps), 0, 1)
+        factor = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    else:
+        raise ValueError(cfg.schedule)
+    return cfg.lr * warm * factor

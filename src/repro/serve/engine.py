@@ -1,0 +1,68 @@
+"""Batched serving: prefill + greedy/temperature decode loop.
+
+Used by the examples, the synthetic-math evaluator (the GSM8K-protocol
+proxy: zero-shot greedy decoding, temperature 0), and the serve dry-run.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import registry
+
+
+def make_decode_fn(cfg: ModelConfig, *, mesh=None, batch_axes=("data",)):
+    model = registry.get(cfg)
+
+    @jax.jit
+    def decode_fn(params, tokens, cache):
+        return model.decode_step(params, cfg, tokens, cache, mesh=mesh,
+                                 batch_axes=batch_axes)
+
+    return decode_fn
+
+
+def make_prefill_fn(cfg: ModelConfig, max_len: int, *, mesh=None,
+                    batch_axes=("data",)):
+    model = registry.get(cfg)
+
+    @partial(jax.jit, static_argnames=())
+    def prefill_fn(params, batch):
+        return model.prefill(params, cfg, batch, max_len, mesh=mesh,
+                             batch_axes=batch_axes)
+
+    return prefill_fn
+
+
+def generate(params, cfg: ModelConfig, batch: dict, *, max_new_tokens: int,
+             max_len: int | None = None, temperature: float = 0.0,
+             rng: jax.Array | None = None, mesh=None, batch_axes=("data",),
+             eos_id: int | None = None):
+    """Greedy (temperature=0, the paper's eval protocol) or sampled decoding.
+    batch["tokens"]: [B, S_prompt]. Returns np.ndarray [B, max_new_tokens]."""
+    b, s = batch["tokens"].shape
+    max_len = max_len or (s + max_new_tokens)
+    prefill_fn = make_prefill_fn(cfg, max_len, mesh=mesh, batch_axes=batch_axes)
+    decode_fn = make_decode_fn(cfg, mesh=mesh, batch_axes=batch_axes)
+    logits, cache = prefill_fn(params, batch)
+    out = []
+    tok = None
+    for i in range(max_new_tokens):
+        if temperature > 0:
+            rng, k = jax.random.split(rng)
+            tok = jax.random.categorical(k, logits.astype(jnp.float32) / temperature)
+        else:
+            tok = jnp.argmax(logits, axis=-1)
+        out.append(np.asarray(tok))
+        logits, cache = decode_fn(params, tok[:, None].astype(jnp.int32), cache)
+    gen = np.stack(out, axis=1)
+    if eos_id is not None:
+        # zero out everything after the first EOS per row
+        ended = np.cumsum(gen == eos_id, axis=1) > 0
+        ended = np.concatenate([np.zeros((b, 1), bool), ended[:, :-1]], axis=1)
+        gen = np.where(ended, 0, gen)
+    return gen

@@ -1,0 +1,32 @@
+"""Task evaluation — the GSM8K-protocol proxy: zero-shot, greedy decoding,
+exact match on the generated answer (paper §4.2)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data import synthetic
+from repro.serve.engine import generate
+
+
+def math_accuracy(params, cfg: ModelConfig, task: synthetic.MathTaskConfig,
+                  *, num_problems: int = 64, mesh=None,
+                  batch_axes=("data",)) -> float:
+    """Greedy-decode the CoT + answer for held-out problems; exact match."""
+    p_len = synthetic.prompt_len(task)
+    toks = []
+    answers = []
+    for i in range(num_problems):
+        t, _ = synthetic.sample_problem(
+            task.__class__(**{**task.__dict__}), task.eval_offset + i)
+        toks.append(t[:p_len])
+        answers.append(synthetic.answer_of(task, i))
+    prompts = np.stack(toks).astype(np.int32)
+    gen = generate(params, cfg, {"tokens": prompts},
+                   max_new_tokens=task.seq_len - p_len, mesh=mesh,
+                   batch_axes=batch_axes, eos_id=synthetic.EOS)
+    correct = 0
+    for row, ans in zip(gen, answers):
+        pred = synthetic.decode_answer(row)
+        correct += int(pred == ans)
+    return correct / num_problems

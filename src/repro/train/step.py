@@ -1,0 +1,207 @@
+"""Compiled train steps.
+
+``make_train_step``  — AdaGradSelect / topk_grad / random / full-FT (Alg. 2
+    integrated: grads -> per-block norms -> in-jit selection -> masked AdamW).
+``make_lora_train_step`` — LoRA baseline (merge-on-forward, standard AdamW on
+    adapters only).
+
+One compiled program serves every selection outcome (masks are runtime
+inputs). Microbatch gradient accumulation (optimizer.microbatch > 1) scans
+over batch slices inside the step.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, OptimizerConfig, SelectConfig
+from repro.core import adagradselect, masked_adamw, partition as part_mod
+from repro.models import registry
+from repro.optim import adamw as plain_adamw
+from repro.optim import lora as lora_mod
+from repro.optim.schedules import learning_rate
+
+
+# ----------------------------------------------------------------- loss
+
+
+def next_token_loss(logits, tokens, loss_mask, shift: int = 1):
+    """Masked CE: position t predicts token t+shift. Computed as
+    gathered-logit minus logsumexp so no [B,S,V] f32 tensor is ever
+    materialized (the f32 reduction fuses)."""
+    if shift:
+        logits = logits[:, :-shift]
+        targets = tokens[:, shift:]
+        mask = loss_mask[:, shift:]
+    else:
+        targets, mask = tokens, loss_mask
+    lse = jax.scipy.special.logsumexp(logits.astype(jnp.float32), axis=-1)
+    picked = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    ll = picked.astype(jnp.float32) - lse
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return -jnp.sum(ll * mask) / denom
+
+
+def model_loss(model, cfg: ModelConfig, params, batch, *, mesh=None,
+               batch_axes=("data",), masks=None):
+    logits, aux, extra = model.apply_train(params, cfg, batch, mesh=mesh,
+                                           batch_axes=batch_axes, masks=masks)
+    loss = next_token_loss(logits, batch["tokens"], batch["loss_mask"])
+    total = loss + aux
+    if "mtp_logits" in extra:
+        mtp = next_token_loss(extra["mtp_logits"], batch["tokens"],
+                              batch["loss_mask"], shift=2)
+        total = total + cfg.mtp_loss_weight * mtp
+    return total, {"ce_loss": loss, "aux_loss": aux}
+
+
+def _accumulate_grads(loss_fn, params, batch, n_micro: int,
+                      accum_dtype=jnp.float32):
+    """Mean grads over microbatches via lax.scan (gradient accumulation)."""
+    if n_micro <= 1:
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+    def resh(x):
+        return x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:])
+
+    micro = jax.tree.map(resh, batch)
+
+    def body(carry, mb):
+        acc, loss_acc, m_acc = carry
+        (loss, met), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+        acc = jax.tree.map(jnp.add, acc, g)
+        m_acc = jax.tree.map(jnp.add, m_acc, met)
+        return (acc, loss_acc + loss, m_acc), None
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params)
+    met0 = {"ce_loss": jnp.zeros((), jnp.float32),
+            "aux_loss": jnp.zeros((), jnp.float32)}
+    (gacc, loss, macc), _ = jax.lax.scan(
+        body, (zeros, jnp.zeros((), jnp.float32), met0), micro)
+    scale = 1.0 / n_micro
+    grads = jax.tree.map(lambda g, p: (g * scale).astype(p.dtype), gacc, params)
+    met = jax.tree.map(lambda m: m * scale, macc)
+    return (loss * scale, met), grads
+
+
+# ----------------------------------------------------------------- steps
+
+
+def make_train_step(model_cfg: ModelConfig, sel_cfg: SelectConfig,
+                    opt_cfg: OptimizerConfig, *, mesh=None,
+                    batch_axes=("data",), use_pallas: bool = False,
+                    donate: bool = True):
+    """-> jitted (state, batch) -> (state, metrics).
+
+    state = {"params", "opt" {m,v,counts}, "sel" (adagradselect state),
+             "step" i32}.
+    """
+    model = registry.get(model_cfg)
+    partition = part_mod.build_partition(model_cfg)
+    gate = model_cfg.gate_weight_grads
+
+    def step_fn(state, batch):
+        sel_state = state["sel"]
+
+        # gate mode decides the mask BEFORE backward (from cumulative signal)
+        pre_mask = None
+        if gate:
+            pre_mask, sel_state = adagradselect.select(
+                sel_cfg, sel_state, jnp.zeros((partition.num_blocks,), jnp.float32),
+                partition.num_blocks)
+
+        def loss_fn(params, mb):
+            masks = (part_mod.layer_masks_dict(partition, pre_mask)
+                     if gate else None)
+            return model_loss(model, model_cfg, params, mb, mesh=mesh,
+                              batch_axes=batch_axes, masks=masks)
+
+        (loss, metrics), grads = _accumulate_grads(
+            loss_fn, state["params"], batch, opt_cfg.microbatch,
+            jnp.dtype(opt_cfg.accum_dtype))
+
+        grads, gnorm = masked_adamw.clip_by_global_norm(grads, opt_cfg.grad_clip)
+        block_norms = part_mod.block_grad_norms(partition, grads,
+                                                use_pallas=use_pallas)
+        if gate:
+            mask = pre_mask
+            # observe norms post-hoc (only computed blocks contribute)
+            sel_state = {**sel_state,
+                         "cum_norms": sel_state["cum_norms"] + block_norms}
+        else:
+            mask, sel_state = adagradselect.select(
+                sel_cfg, state["sel"], block_norms, partition.num_blocks)
+
+        lr = learning_rate(opt_cfg, state["step"])
+        params, opt = masked_adamw.update(
+            opt_cfg, partition, state["params"], grads, state["opt"], mask,
+            lr, use_pallas=use_pallas)
+        new_state = {"params": params, "opt": opt, "sel": sel_state,
+                     "step": state["step"] + 1}
+        metrics = {**metrics, "loss": loss, "grad_norm": gnorm, "lr": lr,
+                   "epsilon": adagradselect.epsilon(sel_cfg, state["step"]),
+                   "num_selected": jnp.sum(mask.astype(jnp.int32)),
+                   "mask": mask, "block_norms": block_norms}
+        return new_state, metrics
+
+    return jax.jit(step_fn, donate_argnums=(0,) if donate else ())
+
+
+def init_train_state(model_cfg: ModelConfig, seed: int = 0,
+                     moment_dtype=jnp.float32) -> dict:
+    model = registry.get(model_cfg)
+    partition = part_mod.build_partition(model_cfg)
+    params = model.init(jax.random.PRNGKey(seed), model_cfg)
+    return {
+        "params": params,
+        "opt": masked_adamw.init_opt_state(partition, params, moment_dtype),
+        "sel": adagradselect.init_state(partition.num_blocks, seed),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def train_state_shapes(model_cfg: ModelConfig, seed: int = 0):
+    return jax.eval_shape(partial(init_train_state, model_cfg), seed)
+
+
+# ----------------------------------------------------------------- LoRA
+
+
+def make_lora_train_step(model_cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
+                         mesh=None, batch_axes=("data",), donate: bool = True):
+    """Baseline: adapters trained with standard AdamW; base weights frozen.
+    state = {"base", "lora", "opt", "step"}."""
+    model = registry.get(model_cfg)
+    rank, alpha = opt_cfg.lora_rank, opt_cfg.lora_alpha
+
+    def step_fn(state, batch):
+        def loss_fn(lp, mb):
+            merged = lora_mod.merge(state["base"], lp, model_cfg, rank, alpha)
+            return model_loss(model, model_cfg, merged, mb, mesh=mesh,
+                              batch_axes=batch_axes)
+
+        (loss, metrics), grads = _accumulate_grads(
+            loss_fn, state["lora"], batch, opt_cfg.microbatch)
+        grads, gnorm = masked_adamw.clip_by_global_norm(grads, opt_cfg.grad_clip)
+        lr = learning_rate(opt_cfg, state["step"])
+        lora_p, opt = plain_adamw.update(opt_cfg, state["lora"], grads,
+                                         state["opt"], lr)
+        new_state = {"base": state["base"], "lora": lora_p, "opt": opt,
+                     "step": state["step"] + 1}
+        metrics = {**metrics, "loss": loss, "grad_norm": gnorm, "lr": lr}
+        return new_state, metrics
+
+    return jax.jit(step_fn, donate_argnums=(0,) if donate else ())
+
+
+def init_lora_state(model_cfg: ModelConfig, opt_cfg: OptimizerConfig,
+                    seed: int = 0) -> dict:
+    model = registry.get(model_cfg)
+    base = model.init(jax.random.PRNGKey(seed), model_cfg)
+    lora_p = lora_mod.init_lora(jax.random.PRNGKey(seed + 1), base, model_cfg,
+                                opt_cfg.lora_rank)
+    return {"base": base, "lora": lora_p,
+            "opt": plain_adamw.init_opt_state(lora_p),
+            "step": jnp.zeros((), jnp.int32)}

@@ -1,0 +1,107 @@
+"""Training loop: logging, checkpointing, straggler watchdog, eval, restore.
+
+Runs the same code path single-device (tests/examples) and distributed
+(launch/train.py passes a mesh + sharded state). Fault-tolerance contract:
+  * `checkpoint_every` saves are async + atomic, include the full TrainState
+    (bandit statistics included) and the data cursor IS the step counter;
+  * on start, `maybe_restore()` resumes from the latest checkpoint;
+  * a step-time EWMA watchdog flags stragglers (> tau * EWMA) and calls the
+    configurable `on_straggler` hook (default: log; production: abort to the
+    last checkpoint so the scheduler can replace the slow host).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import TrainConfig
+from repro.data import loader as data_loader
+from repro.train import step as step_mod
+
+
+@dataclass
+class TrainLog:
+    steps: list = field(default_factory=list)
+    losses: list = field(default_factory=list)
+    step_times: list = field(default_factory=list)
+    metrics: list = field(default_factory=list)
+
+
+class Trainer:
+    def __init__(self, tcfg: TrainConfig, *, mesh=None, batch_axes=("data",),
+                 method: str = "adagradselect", data_source=None,
+                 batch_shardings=None, on_straggler=None, use_pallas=False):
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.method = method
+        self.batch_shardings = batch_shardings
+        self.on_straggler = on_straggler or (lambda step, dt, ewma: None)
+        mcfg = tcfg.model
+        if method == "lora":
+            self.state = step_mod.init_lora_state(mcfg, tcfg.optimizer, tcfg.seed)
+            self.step_fn = step_mod.make_lora_train_step(
+                mcfg, tcfg.optimizer, mesh=mesh, batch_axes=batch_axes)
+        else:
+            sel = tcfg.select if method == "adagradselect" else \
+                tcfg.select.__class__(**{**tcfg.select.__dict__, "policy": method})
+            self.sel_cfg = sel
+            self.state = step_mod.init_train_state(mcfg, tcfg.seed)
+            self.step_fn = step_mod.make_train_step(
+                mcfg, sel, tcfg.optimizer, mesh=mesh, batch_axes=batch_axes,
+                use_pallas=use_pallas)
+        self.data = data_source or data_loader.make_source(
+            "synthetic_math", seq_len=tcfg.seq_len,
+            global_batch=tcfg.global_batch, seed=tcfg.seed)
+        self.ckpt = (CheckpointManager(tcfg.checkpoint_dir, tcfg.checkpoint_keep)
+                     if tcfg.checkpoint_dir else None)
+        self.log = TrainLog()
+        self._ewma = None
+
+    # ------------------------------------------------------------- resume
+    def maybe_restore(self) -> int:
+        if self.ckpt is None or self.ckpt.latest_step() is None:
+            return 0
+        self.state, step = self.ckpt.restore(self.state)
+        return step
+
+    # ------------------------------------------------------------- loop
+    def _device_batch(self, batch: dict):
+        if self.batch_shardings is not None:
+            return jax.tree.map(jax.device_put, batch, self.batch_shardings)
+        return batch
+
+    def train(self, steps: int | None = None, start_step: int | None = None):
+        tcfg = self.tcfg
+        steps = steps if steps is not None else tcfg.steps
+        step0 = start_step if start_step is not None else int(self.state["step"])
+        for step in range(step0, step0 + steps):
+            batch = self._device_batch(self.data.batch_at(step))
+            t0 = time.perf_counter()
+            self.state, metrics = self.step_fn(self.state, batch)
+            loss = float(metrics["loss"])  # blocks; keeps timing honest
+            dt = time.perf_counter() - t0
+
+            # straggler watchdog (EWMA of step time, warmup-excluded)
+            if step > step0 + 2:
+                self._ewma = dt if self._ewma is None else \
+                    0.9 * self._ewma + 0.1 * dt
+                if self._ewma and dt > tcfg.straggler_tau * self._ewma:
+                    self.on_straggler(step, dt, self._ewma)
+
+            self.log.steps.append(step)
+            self.log.losses.append(loss)
+            self.log.step_times.append(dt)
+            if tcfg.log_every and step % tcfg.log_every == 0:
+                small = {k: np.asarray(v).tolist() for k, v in metrics.items()
+                         if np.ndim(v) == 0}
+                self.log.metrics.append({"step": step, **small})
+            if (self.ckpt is not None and tcfg.checkpoint_every
+                    and (step + 1) % tcfg.checkpoint_every == 0):
+                self.ckpt.save(step + 1, self.state)
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        return self.log

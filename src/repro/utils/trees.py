@@ -1,0 +1,58 @@
+"""Pytree path utilities shared across the framework.
+
+Every subsystem that needs per-parameter behaviour (block partitioning,
+sharding rules, LoRA targeting, checkpoint naming) keys off the same
+canonical "/"-joined path strings produced here, so the conventions live
+in exactly one place.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+def path_str(path: tuple) -> str:
+    """Canonical string for a jax.tree_util key path: 'layers/attn/wq'."""
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            parts.append(str(k.name))
+        else:  # FlattenedIndexKey or raw
+            parts.append(str(getattr(k, "key", k)))
+    return "/".join(parts)
+
+
+def tree_map_with_path(fn: Callable[[str, Any], Any], tree: Any, *rest: Any) -> Any:
+    """tree_map where fn receives the canonical path string first."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x, *r: fn(path_str(p), x, *r), tree, *rest
+    )
+
+
+def tree_leaves_with_path(tree: Any) -> list[tuple[str, Any]]:
+    return [
+        (path_str(p), leaf)
+        for p, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]
+    ]
+
+
+def tree_size(tree: Any) -> int:
+    """Total number of elements across all leaves."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree: Any) -> int:
+    return sum(
+        int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+        for x in jax.tree_util.tree_leaves(tree)
+    )
+
+
+def first_prefix(path: str) -> str:
+    return path.split("/", 1)[0]

@@ -1,0 +1,121 @@
+"""Pallas kernel sweeps: shapes x dtypes, assert_allclose vs ref.py oracles
+(interpret mode executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-5, atol=1e-5)
+
+
+class TestBlockGradNorm:
+    @pytest.mark.parametrize("shape", [(3, 100), (2, 64, 65), (5, 7, 9, 11),
+                                       (1, 2048), (4, 4096)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, shape, dtype):
+        g = (jax.random.normal(jax.random.PRNGKey(0), shape) * 2).astype(dtype)
+        out = ops.block_grad_sq_norms(g)
+        expect = ref.block_grad_sq_norms(g)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=1e-3)
+
+    def test_under_jit(self):
+        g = jax.random.normal(jax.random.PRNGKey(1), (4, 333))
+        out = jax.jit(ops.block_grad_sq_norms)(g)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(ref.block_grad_sq_norms(g)),
+                                   rtol=1e-5)
+
+
+class TestMaskedAdamW:
+    @pytest.mark.parametrize("shape", [(4, 100), (2, 32, 9), (3, 2048)])
+    @pytest.mark.parametrize("pdtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, shape, pdtype):
+        ks = jax.random.split(jax.random.PRNGKey(0), 4)
+        l = shape[0]
+        p = jax.random.normal(ks[0], shape).astype(pdtype)
+        g = (0.1 * jax.random.normal(ks[1], shape)).astype(pdtype)
+        m = 0.01 * jax.random.normal(ks[2], shape)
+        v = 0.001 * jnp.abs(jax.random.normal(ks[3], shape))
+        sel = jnp.asarray(np.arange(l) % 2, jnp.float32)
+        cnt = jnp.arange(1, l + 1, dtype=jnp.float32)
+        args = (1e-2, 0.9, 0.999, 1e-8, 0.01)
+        po, mo, vo = ops.masked_adamw(p, g, m, v, sel, cnt, *args)
+        l2 = shape[0]
+        flat = lambda t: t.reshape(l2, -1)  # noqa: E731
+        pr, mr, vr = ref.masked_adamw(flat(p), flat(g), flat(m), flat(v),
+                                      sel, cnt, *args)
+        np.testing.assert_allclose(np.asarray(po, np.float32).reshape(l2, -1),
+                                   np.asarray(pr, np.float32), **_tol(pdtype))
+        np.testing.assert_allclose(np.asarray(mo).reshape(l2, -1),
+                                   np.asarray(mr), rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(vo).reshape(l2, -1),
+                                   np.asarray(vr), rtol=1e-4, atol=1e-8)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("s", [128, 256, 384])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_fwd_sweep(self, s, dtype):
+        b, h, d = 2, 2, 64
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = (0.5 * jax.random.normal(ks[0], (b, s, h, d))).astype(dtype)
+        k = (0.5 * jax.random.normal(ks[1], (b, s, h, d))).astype(dtype)
+        v = (0.5 * jax.random.normal(ks[2], (b, s, h, d))).astype(dtype)
+        o = ops.flash_attention(q, k, v)
+        fold = lambda t: t.transpose(0, 2, 1, 3)  # noqa: E731
+        expect = ref.flash_attention(fold(q), fold(k), fold(v)).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(o, np.float32),
+                                   np.asarray(expect, np.float32), **_tol(dtype))
+
+    def test_grads_match_ref(self):
+        b, s, h, d = 1, 256, 2, 32
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q, k, v = (0.5 * jax.random.normal(kk, (b, s, h, d)) for kk in ks)
+        fold = lambda t: t.transpose(0, 2, 1, 3)  # noqa: E731
+
+        def lk(q, k, v):
+            return jnp.sum(ops.flash_attention(q, k, v) ** 2)
+
+        def lr(q, k, v):
+            return jnp.sum(ref.flash_attention(fold(q), fold(k), fold(v)) ** 2)
+
+        gk = jax.grad(lk, argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(lr, argnums=(0, 1, 2))(q, k, v)
+        for a, b_ in zip(gk, gr):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       rtol=1e-4, atol=1e-4)
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("s,valid", [(512, 100), (1024, 1024), (2048, 7)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, s, valid, dtype):
+        b, h, d = 2, 4, 64
+        ks = jax.random.split(jax.random.PRNGKey(2), 3)
+        q = (jax.random.normal(ks[0], (b, 1, h, d))).astype(dtype)
+        k = (0.5 * jax.random.normal(ks[1], (b, s, h, d))).astype(dtype)
+        v = (0.5 * jax.random.normal(ks[2], (b, s, h, d))).astype(dtype)
+        o = ops.decode_attention(q, k, v, valid)
+        fold = lambda t: t.transpose(0, 2, 1, 3)  # noqa: E731
+        expect = ref.decode_attention(q.reshape(b, h, d), fold(k), fold(v), valid)
+        np.testing.assert_allclose(np.asarray(o.reshape(b, h, d), np.float32),
+                                   np.asarray(expect, np.float32), **_tol(dtype))
+
+
+class TestRMSNorm:
+    @pytest.mark.parametrize("shape", [(8, 128), (2, 16, 256), (3, 512)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, shape, dtype):
+        x = jax.random.normal(jax.random.PRNGKey(3), shape).astype(dtype)
+        sc = (1 + 0.1 * jax.random.normal(jax.random.PRNGKey(4),
+                                          (shape[-1],))).astype(dtype)
+        o = ops.rmsnorm(x, sc)
+        expect = ref.rmsnorm(x.reshape(-1, shape[-1]), sc).reshape(shape)
+        np.testing.assert_allclose(np.asarray(o, np.float32),
+                                   np.asarray(expect, np.float32), **_tol(dtype))

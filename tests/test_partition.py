@@ -1,0 +1,71 @@
+"""BlockPartition: the paper's block taxonomy over every arch family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, get_smoke_config
+from repro.core import partition as pmod
+from repro.models import registry
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_partition_covers_params(arch):
+    cfg = get_smoke_config(arch)
+    part = pmod.build_partition(cfg)
+    model = registry.get(cfg)
+    params = jax.eval_shape(lambda k: model.init(k, cfg), jax.random.PRNGKey(0))
+    # every top-level param group appears in exactly one partition group
+    assert {g.key for g in part.groups} == set(params.keys())
+    assert part.num_blocks == cfg.num_blocks
+    # stacked groups really have the stated leading axis
+    for g in part.groups:
+        for leaf in jax.tree.leaves(params[g.key]):
+            if g.stacked:
+                assert leaf.shape[0] == g.length, (g.key, leaf.shape)
+
+
+def test_block_grad_norms_matches_manual():
+    cfg = get_smoke_config("llama3.2-1b")
+    part = pmod.build_partition(cfg)
+    model = registry.get(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    grads = jax.tree.map(lambda p: jnp.ones_like(p) * 0.5, params)
+    norms = np.asarray(pmod.block_grad_norms(part, grads))
+    counts = pmod.params_per_block(part, params)
+    expected = np.sqrt(counts * 0.25)
+    np.testing.assert_allclose(norms, expected, rtol=1e-5)
+
+
+def test_leaf_masks_freeze_alignment():
+    cfg = get_smoke_config("qwen3-moe-30b-a3b")
+    part = pmod.build_partition(cfg)
+    model = registry.get(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    mask = jnp.zeros(part.num_blocks, bool).at[2].set(True)
+    masks = pmod.leaf_masks(part, params, mask)
+    for g in part.groups:
+        for leaf in jax.tree.leaves(masks[g.key]):
+            if g.stacked:
+                flat = np.asarray(leaf).reshape(g.length, -1)[:, 0]
+                exp = np.asarray(mask[g.start:g.start + g.length])
+                np.testing.assert_array_equal(flat.astype(bool), exp)
+
+
+def test_params_per_block_total():
+    cfg = get_smoke_config("mamba2-2.7b")
+    part = pmod.build_partition(cfg)
+    model = registry.get(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    counts = pmod.params_per_block(part, params)
+    total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    assert counts.sum() == total
+
+
+def test_layer_masks_dict_groups():
+    cfg = get_smoke_config("zamba2-7b")
+    part = pmod.build_partition(cfg)
+    mask = jnp.ones(part.num_blocks)
+    lm = pmod.layer_masks_dict(part, mask)
+    assert set(lm) == {"layers", "shared_attn"}
+    assert lm["layers"].shape == (cfg.num_layers,)

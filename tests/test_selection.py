@@ -1,0 +1,136 @@
+"""Unit + property tests for the AdaGradSelect controller (paper Alg. 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import SelectConfig
+from repro.core import adagradselect, selection
+
+
+class TestPrimitives:
+    def test_topk_mask(self):
+        scores = jnp.array([3.0, 1.0, 4.0, 1.5, 9.0])
+        mask = selection.topk_mask(scores, 2)
+        assert mask.tolist() == [False, False, True, False, True]
+
+    def test_gumbel_without_replacement_exact_k(self):
+        probs = jax.random.dirichlet(jax.random.PRNGKey(0), jnp.ones(20))
+        for seed in range(5):
+            m = selection.sample_without_replacement(
+                jax.random.PRNGKey(seed), probs, 7)
+            assert int(m.sum()) == 7
+
+    def test_gumbel_sampling_tracks_probs(self):
+        """High-probability arms must be drawn far more often."""
+        probs = jnp.array([0.70, 0.15, 0.05, 0.04, 0.03, 0.03])
+        counts = np.zeros(6)
+        for seed in range(400):
+            m = selection.sample_without_replacement(
+                jax.random.PRNGKey(seed), probs, 1)
+            counts += np.asarray(m)
+        assert counts[0] > 200, counts
+        assert counts[0] > 3 * counts[1]
+
+    def test_dirichlet_probs_normalized(self):
+        f = jnp.array([5.0, 0.0, 2.0])
+        p = selection.dirichlet_probs(jax.random.PRNGKey(1), f, 1.0)
+        assert abs(float(p.sum()) - 1.0) < 1e-5
+
+    def test_always_include(self):
+        m = jnp.zeros(5, bool)
+        m = selection.apply_always_include(m, (0, 3))
+        assert m.tolist() == [True, False, False, True, False]
+
+
+class TestEpsilon:
+    def test_exponential_decay(self):
+        cfg = SelectConfig(epsilon0=1.0, epsilon_decay=0.1, steps_per_epoch=100)
+        e0 = adagradselect.epsilon(cfg, jnp.asarray(0))
+        e10 = adagradselect.epsilon(cfg, jnp.asarray(10))
+        assert abs(float(e0) - 1.0) < 1e-6
+        assert abs(float(e10) - np.exp(-1.0)) < 1e-5
+
+    def test_epoch2_pure_exploitation(self):
+        cfg = SelectConfig(epsilon0=1.0, epsilon_decay=0.0, steps_per_epoch=10)
+        assert float(adagradselect.epsilon(cfg, jnp.asarray(10))) == 0.0
+        assert float(adagradselect.epsilon(cfg, jnp.asarray(9))) == 1.0
+
+
+class TestSelect:
+    def _run(self, policy, steps=40, nb=10, k=20.0, **kw):
+        cfg = SelectConfig(policy=policy, k_percent=k, steps_per_epoch=20, **kw)
+        st_ = adagradselect.init_state(nb, seed=3)
+        norms = jnp.asarray(np.linspace(2.0, 0.1, nb), jnp.float32)
+        masks = []
+        for _ in range(steps):
+            m, st_ = adagradselect.select(cfg, st_, norms, nb)
+            masks.append(np.asarray(m))
+        return np.stack(masks), st_, cfg
+
+    @pytest.mark.parametrize("policy", ["adagradselect", "topk_grad", "random"])
+    def test_exact_k_selected(self, policy):
+        masks, _, cfg = self._run(policy)
+        assert (masks.sum(1) == cfg.num_selected(10)).all()
+
+    def test_all_policy_is_fft(self):
+        masks, _, _ = self._run("all")
+        assert masks.all()
+
+    def test_topk_grad_matches_alg1(self):
+        masks, _, _ = self._run("topk_grad")
+        # norms are descending -> always blocks {0, 1}
+        assert (masks[:, :2]).all() and not masks[:, 2:].any()
+
+    def test_frequency_counts_match_masks(self):
+        masks, st_, _ = self._run("adagradselect")
+        np.testing.assert_allclose(np.asarray(st_["freq"]), masks.sum(0))
+
+    def test_exploitation_concentrates_on_high_grad_blocks(self):
+        """The bandit should end up favoring the top-gradient arms."""
+        masks, st_, _ = self._run("adagradselect", steps=120)
+        freq = np.asarray(st_["freq"])
+        assert freq[:2].sum() > freq[5:].sum(), freq
+
+    def test_deterministic_in_seed_and_step(self):
+        cfg = SelectConfig(policy="adagradselect", k_percent=20)
+        norms = jnp.ones(10)
+        s1 = adagradselect.init_state(10, seed=5)
+        s2 = adagradselect.init_state(10, seed=5)
+        m1, _ = adagradselect.select(cfg, s1, norms, 10)
+        m2, _ = adagradselect.select(cfg, s2, norms, 10)
+        assert (np.asarray(m1) == np.asarray(m2)).all()
+
+    def test_jit_compatible(self):
+        cfg = SelectConfig(policy="adagradselect", k_percent=30)
+        st_ = adagradselect.init_state(8)
+        fn = jax.jit(lambda s, n: adagradselect.select(cfg, s, n, 8))
+        m, st2 = fn(st_, jnp.ones(8))
+        assert int(m.sum()) == cfg.num_selected(8)
+
+
+class TestProperties:
+    @settings(max_examples=30, deadline=None)
+    @given(nb=st.integers(3, 40), kpct=st.floats(1.0, 100.0),
+           seed=st.integers(0, 2**30))
+    def test_num_selected_bounds(self, nb, kpct, seed):
+        cfg = SelectConfig(policy="adagradselect", k_percent=kpct)
+        k = cfg.num_selected(nb)
+        assert 1 <= k <= nb  # paper guideline: min% >= 100/B
+        st_ = adagradselect.init_state(nb, seed=seed)
+        m, _ = adagradselect.select(cfg, st_, jnp.ones(nb), nb)
+        assert int(m.sum()) == k
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 1000), steps=st.integers(1, 25))
+    def test_freq_total_invariant(self, seed, steps):
+        """sum(freq) == steps * k after any number of steps."""
+        nb = 12
+        cfg = SelectConfig(policy="adagradselect", k_percent=25)
+        st_ = adagradselect.init_state(nb, seed=seed)
+        for _ in range(steps):
+            _, st_ = adagradselect.select(cfg, st_, jnp.ones(nb), nb)
+        assert int(np.asarray(st_["freq"]).sum()) == steps * cfg.num_selected(nb)
+        assert int(st_["step"]) == steps

@@ -1,0 +1,86 @@
+"""Mamba2 SSD: chunked form vs naive recurrence, decode handoff, chunk-size
+invariance (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ssm
+
+
+def _naive(xs, dt, a, b, c):
+    bsz, s, h, p = xs.shape
+    n = b.shape[-1]
+    state = jnp.zeros((bsz, h, p, n))
+    ys = []
+    for t in range(s):
+        da = jnp.exp(a[None] * dt[:, t])
+        state = state * da[..., None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhpn", dt[:, t], b[:, t], xs[:, t])
+        ys.append(jnp.einsum("bhpn,bhn->bhp", state, c[:, t]))
+    return jnp.stack(ys, 1), state
+
+
+def _rand(seed, *shape):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape)
+
+
+def test_chunked_matches_naive():
+    B, S, H, P, N = 2, 64, 4, 8, 8
+    xs, dt = _rand(0, B, S, H, P), jax.nn.softplus(_rand(1, B, S, H))
+    a = -jnp.exp(0.3 * _rand(2, H))
+    b, c = _rand(3, B, S, H, N), _rand(4, B, S, H, N)
+    y_ref, s_ref = _naive(xs, dt, a, b, c)
+    y, s = ssm.ssd_chunked(xs, dt, a, b, c, chunk=16)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(chunk=st.sampled_from([4, 8, 16, 32, 64]), seed=st.integers(0, 50))
+def test_chunk_size_invariance(chunk, seed):
+    """The chunked SSD result must not depend on the chunk size."""
+    B, S, H, P, N = 1, 64, 2, 4, 4
+    xs = _rand(seed, B, S, H, P)
+    dt = jax.nn.softplus(_rand(seed + 1, B, S, H))
+    a = -jnp.exp(0.3 * _rand(seed + 2, H))
+    b, c = _rand(seed + 3, B, S, H, N), _rand(seed + 4, B, S, H, N)
+    y64, s64 = ssm.ssd_chunked(xs, dt, a, b, c, chunk=64)
+    y, s = ssm.ssd_chunked(xs, dt, a, b, c, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y64), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s64), atol=1e-4)
+
+
+def test_layer_prefill_decode_consistency():
+    cfg = ModelConfig(name="t", family="ssm", d_model=32, ssm_state=8,
+                      ssm_head_dim=8, ssm_expand=2, ssm_chunk=16,
+                      dtype="float32", num_heads=0, num_kv_heads=0)
+    params = ssm.init(jax.random.PRNGKey(0), cfg)
+    x = 0.5 * _rand(9, 2, 48, 32)
+    full = ssm.apply(params, cfg, x)
+    out, (conv, state) = ssm.apply(params, cfg, x[:, :32], return_state=True)
+    outs = [out]
+    for t in range(32, 48):
+        o, conv, state = ssm.apply_decode(params, cfg, x[:, t:t + 1], conv, state)
+        outs.append(o)
+    inc = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(inc), np.asarray(full), atol=2e-5)
+
+
+def test_state_decay_stability():
+    """Long-run decode must not blow up (A strictly negative)."""
+    cfg = ModelConfig(name="t", family="ssm", d_model=16, ssm_state=4,
+                      ssm_head_dim=8, ssm_expand=2, ssm_chunk=8,
+                      dtype="float32", num_heads=0, num_kv_heads=0)
+    params = ssm.init(jax.random.PRNGKey(0), cfg)
+    d_inner, nheads, gn = ssm.dims(cfg)
+    conv = {"x": jnp.zeros((1, cfg.ssm_conv - 1, d_inner)),
+            "b": jnp.zeros((1, cfg.ssm_conv - 1, gn)),
+            "c": jnp.zeros((1, cfg.ssm_conv - 1, gn))}
+    state = jnp.zeros((1, nheads, cfg.ssm_head_dim, cfg.ssm_state))
+    x = 0.5 * _rand(5, 1, 1, 16)
+    for _ in range(200):
+        o, conv, state = ssm.apply_decode(params, cfg, x, conv, state)
+    assert bool(jnp.isfinite(state).all()) and float(jnp.abs(state).max()) < 1e3
