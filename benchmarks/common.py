@@ -4,7 +4,8 @@ Benchmarks run REDUCED models on CPU (the full-scale numbers come from the
 dry-run/roofline pipeline); every paper table/figure has a corresponding
 bench that reproduces its experimental SHAPE (methods x metrics) on the
 synthetic math task, with wall-clock step time and the paper's memory model
-as the efficiency axes.
+as the efficiency axes. Methods are resolved through the repro.methods
+registry, so any registered method name works as a bench row.
 """
 from __future__ import annotations
 
@@ -15,10 +16,7 @@ import numpy as np
 
 from repro.configs.base import (ModelConfig, OptimizerConfig, SelectConfig,
                                 TrainConfig)
-from repro.core import build_partition
-from repro.core.offload import optimizer_memory_report
 from repro.data.synthetic import MathTaskConfig
-from repro.models import registry
 from repro.train.evaluate import math_accuracy
 from repro.train.trainer import Trainer
 
@@ -48,37 +46,22 @@ def run_method(method: str, *, k_percent: float = 20.0, lora_rank: int = 8,
                eval_problems: int = 48) -> MethodResult:
     tcfg = TrainConfig(
         model=model,
-        select=SelectConfig(policy=method if method != "lora" else "all",
-                            k_percent=k_percent,
+        method=method,
+        select=SelectConfig(k_percent=k_percent,
                             steps_per_epoch=max(1, steps // 3),
                             epsilon_decay=0.05),
         optimizer=OptimizerConfig(lr=lr, schedule="cosine", warmup_steps=10,
                                   total_steps=steps, lora_rank=lora_rank),
         seq_len=SEQ_LEN, global_batch=GLOBAL_BATCH, steps=steps, log_every=0,
         seed=seed)
-    tr = Trainer(tcfg, method=method)
+    tr = Trainer(tcfg)
     t0 = time.perf_counter()
     log = tr.train()
     # steady-state step time (exclude compile)
     st = float(np.mean(log.step_times[3:])) * 1e6
 
-    params = (tr.state["params"] if method != "lora" else _merged(tr, model))
+    params = tr.method.eval_params(model, tcfg.optimizer, tr.state)
     acc = math_accuracy(params, model, TASK, num_problems=eval_problems)
-
-    part = build_partition(model)
-    if method == "lora":
-        from repro.optim.lora import num_lora_params
-        opt_bytes = 2 * num_lora_params(tr.state["lora"]) * 4
-    elif method == "all":
-        opt_bytes = optimizer_memory_report(part, params, 100.0).mem_full
-    else:
-        opt_bytes = optimizer_memory_report(part, params, k_percent).mem_selective
-    return MethodResult(method, float(log.losses[-1]), acc, st, opt_bytes,
-                        log.losses)
-
-
-def _merged(tr, model):
-    from repro.optim.lora import merge
-    ocfg = tr.tcfg.optimizer
-    return merge(tr.state["base"], tr.state["lora"], model, ocfg.lora_rank,
-                 ocfg.lora_alpha)
+    report = tr.method.trainable_param_report(model, tr.state)
+    return MethodResult(method, float(log.losses[-1]), acc, st,
+                        report.opt_bytes, log.losses)

@@ -38,17 +38,22 @@ def main():
     ap.add_argument("--preset", default="ci", choices=list(PRESETS))
     ap.add_argument("--k", type=float, default=25.0)
     ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--methods", default="adagradselect,full",
+                    help="comma-separated repro.methods registry names "
+                         "(e.g. adagradselect,lisa,grass,lora,full)")
     args = ap.parse_args()
     preset = PRESETS[args.preset]
     model, steps = preset["model"], args.steps or preset["steps"]
+    methods_to_run = [m.strip() for m in args.methods.split(",") if m.strip()]
 
     task = MathTaskConfig(digits=3, seq_len=64)
     results = {}
-    for method in ("adagradselect", "all"):
+    for method in methods_to_run:
         ckdir = tempfile.mkdtemp(prefix=f"ft_{method}_")
         tcfg = TrainConfig(
             model=model,
-            select=SelectConfig(policy="adagradselect", k_percent=args.k,
+            method=method,
+            select=SelectConfig(k_percent=args.k,
                                 steps_per_epoch=max(1, steps // 3),
                                 epsilon_decay=0.05),
             optimizer=OptimizerConfig(lr=3e-3, schedule="cosine",
@@ -56,19 +61,23 @@ def main():
             seq_len=task.seq_len, global_batch=preset["batch"], steps=steps,
             log_every=max(1, steps // 5), checkpoint_dir=ckdir,
             checkpoint_every=max(1, steps // 2))
-        tr = Trainer(tcfg, method=method)
+        tr = Trainer(tcfg)
         log = tr.train()
-        acc = math_accuracy(tr.state["params"], model, task, num_problems=64)
+        params = tr.method.eval_params(model, tcfg.optimizer, tr.state)
+        acc = math_accuracy(params, model, task, num_problems=64)
         st = float(np.mean(log.step_times[3:]))
+        rep = tr.method.trainable_param_report(model, tr.state)
         results[method] = (log.losses[-1], acc, st)
         print(f"[{method}] loss {log.losses[0]:.3f}->{log.losses[-1]:.4f} "
-              f"exact-match {acc:.2%}  step {st*1e3:.0f}ms  (ckpt: {ckdir})")
+              f"exact-match {acc:.2%}  step {st*1e3:.0f}ms  "
+              f"trainable {rep.trainable_fraction:.0%}  (ckpt: {ckdir})")
 
-    a, f = results["adagradselect"], results["all"]
-    print(f"\nAdaGradSelect vs full-FT: accuracy {a[1]:.2%} vs {f[1]:.2%}, "
-          f"step time {a[2]/f[2]:.2f}x, "
-          f"optimizer-state residency {args.k:.0f}% of blocks "
-          f"(paper: ~equal accuracy, faster + 35% less memory)")
+    if "adagradselect" in results and "full" in results:
+        a, f = results["adagradselect"], results["full"]
+        print(f"\nAdaGradSelect vs full-FT: accuracy {a[1]:.2%} vs {f[1]:.2%}, "
+              f"step time {a[2]/f[2]:.2f}x, "
+              f"optimizer-state residency {args.k:.0f}% of blocks "
+              f"(paper: ~equal accuracy, faster + 35% less memory)")
 
 
 if __name__ == "__main__":

@@ -3,9 +3,13 @@ production multi-pod JAX framework. See README.md / DESIGN.md.
 
 Public API surface:
     repro.configs        -- get_config / get_smoke_config / SHAPES / dataclasses
-    repro.core           -- build_partition, block_grad_norms, select, masked AdamW
+    repro.core           -- build_partition, block_grad_norms, selection-policy
+                            registry (register_policy/select), masked AdamW
+    repro.methods        -- fine-tuning method registry: build(name, tcfg) ->
+                            FinetuneMethod (full/adagradselect/topk_grad/
+                            random/lora/lisa/grass)
     repro.models         -- registry.get(cfg): init/apply_train/prefill/decode_step
-    repro.train          -- Trainer, make_train_step, evaluate
+    repro.train          -- Trainer (method-agnostic loop), shared loss/accum
     repro.serve          -- engine.generate
     repro.launch         -- mesh / dryrun / train / serve entry points
 """

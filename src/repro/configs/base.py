@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional
 
 
 @dataclass(frozen=True)
@@ -162,15 +161,36 @@ SHAPES: dict[str, ShapeConfig] = {
 
 @dataclass(frozen=True)
 class SelectConfig:
-    """AdaGradSelect hyper-parameters (paper §3.2)."""
+    """Selection-policy hyper-parameters (paper §3.2 + baseline policies).
 
-    policy: str = "adagradselect"  # "adagradselect" | "topk_grad" | "random" | "all" (=FFT) | "none"
+    ``policy`` names an entry in the core/adagradselect.py policy registry
+    ("adagradselect" | "topk_grad" | "random" | "all" | "lisa" | "grass" |
+    any runtime-registered policy — validated at lookup, not here)."""
+
+    policy: str = "adagradselect"
     k_percent: float = 20.0        # percentage of blocks updated per step
     epsilon0: float = 1.0          # initial exploration rate
     epsilon_decay: float = 0.01    # lambda in eps_t = eps0 * exp(-lambda * t)
     dirichlet_delta: float = 1.0   # smoothing constant delta (alpha = f + delta)
     steps_per_epoch: int = 1000    # after this, epoch>=2 -> pure exploitation
     always_include: tuple = ()     # block indices always selected (e.g. embed)
+    lisa_interval: int = 20        # "lisa": steps between mask resamples
+    grass_temperature: float = 1.0  # "grass": sampling ∝ cum_norms^T
+
+    def __post_init__(self):
+        if not 0.0 < self.k_percent <= 100.0:
+            raise ValueError(f"k_percent must be in (0, 100], got "
+                             f"{self.k_percent}")
+        if self.epsilon0 < 0.0 or self.epsilon_decay < 0.0:
+            raise ValueError("epsilon0/epsilon_decay must be >= 0")
+        if self.dirichlet_delta <= 0.0:
+            raise ValueError("dirichlet_delta must be > 0")
+        if self.steps_per_epoch < 1:
+            raise ValueError("steps_per_epoch must be >= 1")
+        if self.lisa_interval < 1:
+            raise ValueError("lisa_interval must be >= 1")
+        if self.grass_temperature < 0.0:
+            raise ValueError("grass_temperature must be >= 0")
 
     def num_selected(self, num_blocks: int) -> int:
         # paper guideline: min% >= 100/B  => at least one block per step
@@ -228,6 +248,11 @@ class TrainConfig:
     model: ModelConfig = field(default_factory=ModelConfig)
     select: SelectConfig = field(default_factory=SelectConfig)
     optimizer: OptimizerConfig = field(default_factory=OptimizerConfig)
+    # fine-tuning method: an entry in the repro.methods registry ("full",
+    # "adagradselect", "topk_grad", "random", "lora", "lisa", "grass", ...).
+    # Validated at Trainer construction against the runtime registry so
+    # externally registered methods work too.
+    method: str = "adagradselect"
     seq_len: int = 512
     global_batch: int = 8
     steps: int = 100

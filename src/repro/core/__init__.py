@@ -1,6 +1,13 @@
 """AdaGradSelect core: block partitioning, selection policies, masked AdamW,
 optimizer-state residency (the paper's primary contribution)."""
-from repro.core.adagradselect import init_state, select  # noqa: F401
+from repro.core.adagradselect import (  # noqa: F401
+    SelectionPolicy,
+    available_policies,
+    get_policy,
+    init_state,
+    register_policy,
+    select,
+)
 from repro.core.partition import (  # noqa: F401
     BlockPartition,
     block_grad_norms,

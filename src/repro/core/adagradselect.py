@@ -1,19 +1,27 @@
-"""AdaGradSelect controller — the paper's Algorithm 2, fully in-jit.
+"""Layer-selection controller: a registry of ``SelectionPolicy`` objects.
 
-State (replicated, tiny) and transition:
+The paper's Algorithm 2 (the ``adagradselect`` policy) is one entry in a
+string-keyed policy registry; the baselines it is compared against
+(``topk_grad`` = Alg. 1, ``random``, ``all`` = full FT) and the beyond-paper
+policies (``lisa`` = interval-resampled random layers, ``grass`` =
+gradient-norm importance sampling) are sibling entries. Each policy declares
+its own state pytree (``extra_state``) on top of three common fields —
 
-  epoch 1 (step < steps_per_epoch), with prob eps_t = eps0 * exp(-lambda t):
-      EXPLORATION  — top-k% blocks by gradient-norm signal (cumulative by
-                     default, per §3.2; "instant" reproduces Alg. 1 ranking)
-  otherwise, and always from epoch 2 on:
-      EXPLOITATION — p ~ Dirichlet(freq + delta); draw k% blocks without
-                     replacement ∝ p (Gumbel-top-k)
+    {"step": i32, "key": PRNGKey, "mask": bool[num_blocks]}
 
-  freq[b] += 1 for every selected block, every step (exploration included),
-  so early exploration shapes the later Dirichlet exploitation.
+so e.g. only ``adagradselect`` carries ``freq`` (Dirichlet posterior counts)
+and only the cumulative-signal policies carry ``cum_norms``. The whole
+controller runs inside the compiled train step: masks are runtime vectors,
+never recompile triggers.
 
 Selection is deterministic given (seed, step): the PRNG key is folded with
-the step counter, so replicas/restarts reproduce the same arm sequence.
+the step counter, so replicas/restarts reproduce the same arm sequence. The
+named sub-keys ("eps", "dir", "gum", "rnd") are split in a fixed order to
+keep trajectories reproducible across policy additions.
+
+Adding a policy: subclass ``SelectionPolicy``, decorate with
+``@register_policy("name")``, declare ``extra_state`` if it is stateful —
+the train step, trainer, and method registry pick it up untouched.
 """
 from __future__ import annotations
 
@@ -23,14 +31,151 @@ import jax.numpy as jnp
 from repro.configs.base import SelectConfig
 from repro.core import selection
 
+# --------------------------------------------------------------- registry
 
-def init_state(num_blocks: int, seed: int = 0) -> dict:
+_POLICIES: dict[str, "SelectionPolicy"] = {}
+
+
+def register_policy(name: str):
+    """Class decorator: instantiate and register a SelectionPolicy."""
+    def deco(cls):
+        cls.name = name
+        _POLICIES[name] = cls()
+        return cls
+    return deco
+
+
+def get_policy(name: str) -> "SelectionPolicy":
+    try:
+        return _POLICIES[name]
+    except KeyError:
+        raise ValueError(f"unknown selection policy {name!r}; "
+                         f"available: {available_policies()}") from None
+
+
+def available_policies() -> tuple:
+    return tuple(sorted(_POLICIES))
+
+
+class SelectionPolicy:
+    """One mask-proposal rule. Policies are stateless singletons; all
+    trajectory state lives in the (per-policy) state pytree."""
+
+    name = "base"
+
+    def extra_state(self, num_blocks: int) -> dict:
+        """Policy-specific state fields (beyond step/key/mask)."""
+        return {}
+
+    def propose(self, cfg: SelectConfig, state: dict, keys: dict,
+                block_norms: jax.Array, k: int, num_blocks: int) -> jax.Array:
+        """-> bool mask [num_blocks] with exactly k True entries."""
+        raise NotImplementedError
+
+    def update(self, cfg: SelectConfig, state: dict, mask: jax.Array,
+               block_norms: jax.Array) -> dict:
+        """New values for this policy's ``extra_state`` fields."""
+        return {}
+
+    def observe(self, cfg: SelectConfig, state: dict,
+                block_norms: jax.Array) -> dict:
+        """Post-hoc norm observation (gate mode: the mask was decided before
+        backward, so cumulative signals are fed after the fact)."""
+        if "cum_norms" in state:
+            return {**state, "cum_norms": state["cum_norms"] + block_norms}
+        return state
+
+
+@register_policy("all")
+class FullPolicy(SelectionPolicy):
+    """Every block, every step — full fine-tuning."""
+
+    def propose(self, cfg, state, keys, block_norms, k, num_blocks):
+        return jnp.ones((num_blocks,), jnp.bool_)
+
+
+@register_policy("random")
+class RandomPolicy(SelectionPolicy):
+    """Uniform k-subset, redrawn every step."""
+
+    def propose(self, cfg, state, keys, block_norms, k, num_blocks):
+        return selection.random_mask(keys["rnd"], num_blocks, k)
+
+
+@register_policy("topk_grad")
+class TopKGradPolicy(SelectionPolicy):
+    """Paper Alg. 1: rank by this step's instantaneous gradient norms."""
+
+    def propose(self, cfg, state, keys, block_norms, k, num_blocks):
+        return selection.topk_mask(block_norms, k)
+
+
+@register_policy("adagradselect")
+class AdaGradSelectPolicy(SelectionPolicy):
+    """Paper Alg. 2: eps-greedy exploration over the cumulative-norm top-k,
+    Dirichlet(freq + delta) exploitation via Gumbel-top-k sampling."""
+
+    def extra_state(self, num_blocks):
+        return {"freq": jnp.zeros((num_blocks,), jnp.float32),
+                "cum_norms": jnp.zeros((num_blocks,), jnp.float32)}
+
+    def propose(self, cfg, state, keys, block_norms, k, num_blocks):
+        signal = state["cum_norms"] + block_norms  # cumulative (§3.2)
+        explore_mask = selection.topk_mask(signal, k)
+        probs = selection.dirichlet_probs(keys["dir"], state["freq"],
+                                          cfg.dirichlet_delta)
+        exploit_mask = selection.sample_without_replacement(keys["gum"], probs, k)
+        eps = epsilon(cfg, state["step"])
+        do_explore = jax.random.uniform(keys["eps"]) < eps
+        return jnp.where(do_explore, explore_mask, exploit_mask)
+
+    def update(self, cfg, state, mask, block_norms):
+        return {"freq": state["freq"] + mask.astype(jnp.float32),
+                "cum_norms": state["cum_norms"] + block_norms}
+
+
+@register_policy("lisa")
+class LisaPolicy(SelectionPolicy):
+    """LISA-style: a uniform-random k-subset held fixed for
+    ``cfg.lisa_interval`` steps, then resampled (arXiv:2403.17919 idiom)."""
+
+    def propose(self, cfg, state, keys, block_norms, k, num_blocks):
+        fresh = selection.random_mask(keys["rnd"], num_blocks, k)
+        resample = (state["step"] % cfg.lisa_interval) == 0
+        return jnp.where(resample, fresh, state["mask"])
+
+
+@register_policy("grass")
+class GrassPolicy(SelectionPolicy):
+    """GRASS-style importance sampling: draw k blocks without replacement
+    with probability proportional to the cumulative gradient-norm signal
+    raised to ``cfg.grass_temperature`` (0 = uniform, 1 = proportional,
+    large = greedy top-k)."""
+
+    def extra_state(self, num_blocks):
+        return {"cum_norms": jnp.zeros((num_blocks,), jnp.float32)}
+
+    def propose(self, cfg, state, keys, block_norms, k, num_blocks):
+        signal = state["cum_norms"] + block_norms
+        w = jnp.power(signal + 1e-12, cfg.grass_temperature)
+        probs = w / jnp.maximum(jnp.sum(w), 1e-20)
+        return selection.sample_without_replacement(keys["gum"], probs, k)
+
+    def update(self, cfg, state, mask, block_norms):
+        return {"cum_norms": state["cum_norms"] + block_norms}
+
+
+# ------------------------------------------------------------- controller
+
+
+def init_state(num_blocks: int, seed: int = 0,
+               policy: str = "adagradselect") -> dict:
+    """Per-policy state pytree: common fields + the policy's extras."""
     return {
-        "freq": jnp.zeros((num_blocks,), jnp.float32),
-        "cum_norms": jnp.zeros((num_blocks,), jnp.float32),
         "step": jnp.zeros((), jnp.int32),
         "key": jax.random.PRNGKey(seed),
         "mask": jnp.ones((num_blocks,), jnp.bool_),  # step-0 default: all
+        **get_policy(policy).extra_state(num_blocks),
     }
 
 
@@ -43,37 +188,26 @@ def epsilon(cfg: SelectConfig, step) -> jax.Array:
 
 def select(cfg: SelectConfig, state: dict, block_norms: jax.Array,
            num_blocks: int) -> tuple[jax.Array, dict]:
-    """One Alg. 2 iteration. ``block_norms``: this step's per-block gradient
-    L2 norms [num_blocks]. Returns (mask [num_blocks] bool, new state)."""
+    """One selection iteration. ``block_norms``: this step's per-block
+    gradient L2 norms [num_blocks]. Returns (mask [num_blocks] bool, new
+    state). Dispatches on ``cfg.policy`` through the registry."""
+    pol = get_policy(cfg.policy)
     k = cfg.num_selected(num_blocks)
-    cum = state["cum_norms"] + block_norms
     key = jax.random.fold_in(state["key"], state["step"])
     k_eps, k_dir, k_gum, k_rnd = jax.random.split(key, 4)
+    keys = {"eps": k_eps, "dir": k_dir, "gum": k_gum, "rnd": k_rnd}
 
-    if cfg.policy == "all":
-        mask = jnp.ones((num_blocks,), jnp.bool_)
-    elif cfg.policy == "random":
-        mask = selection.random_mask(k_rnd, num_blocks, k)
-    elif cfg.policy == "topk_grad":
-        # Alg. 1: rank by this step's gradient norms
-        mask = selection.topk_mask(block_norms, k)
-    elif cfg.policy == "adagradselect":
-        signal = cum  # cumulative gradient norms (§3.2)
-        explore_mask = selection.topk_mask(signal, k)
-        probs = selection.dirichlet_probs(k_dir, state["freq"], cfg.dirichlet_delta)
-        exploit_mask = selection.sample_without_replacement(k_gum, probs, k)
-        eps = epsilon(cfg, state["step"])
-        do_explore = jax.random.uniform(k_eps) < eps
-        mask = jnp.where(do_explore, explore_mask, exploit_mask)
-    else:
-        raise ValueError(f"unknown selection policy {cfg.policy!r}")
-
+    mask = pol.propose(cfg, state, keys, block_norms, k, num_blocks)
     mask = selection.apply_always_include(mask, cfg.always_include)
     new_state = {
-        "freq": state["freq"] + mask.astype(jnp.float32),
-        "cum_norms": cum,
+        **state,
+        **pol.update(cfg, state, mask, block_norms),
         "step": state["step"] + 1,
-        "key": state["key"],
         "mask": mask,
     }
     return mask, new_state
+
+
+def observe(cfg: SelectConfig, state: dict, block_norms: jax.Array) -> dict:
+    """Feed post-backward norms to the policy without selecting (gate mode)."""
+    return get_policy(cfg.policy).observe(cfg, state, block_norms)

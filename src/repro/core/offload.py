@@ -22,7 +22,7 @@ from dataclasses import dataclass
 
 import jax
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.core.partition import BlockPartition, params_per_block
 from repro.utils.trees import tree_map_with_path
@@ -35,29 +35,32 @@ def host_memory_kind_supported() -> bool:
 
 
 def moment_shardings(policy: str, param_specs: dict, mesh,
-                     data_axis: str = "data") -> dict:
-    """Shardings for each of m/v given the params' PartitionSpec pytree."""
+                     data_axis: str = "data", params_shapes=None) -> dict:
+    """Shardings for each of m/v given the params' PartitionSpec pytree.
+
+    For ``policy == "zero1"`` the specs are additionally sharded over the
+    data axis (first unsharded, divisible dim) via
+    ``distributed.sharding.apply_zero1`` — this needs ``params_shapes``, a
+    shape-carrying pytree congruent with ``param_specs`` (arrays or
+    ShapeDtypeStructs), to resolve divisibility against concrete dims.
+    """
     if policy == "host" and not host_memory_kind_supported():
         policy = "none"
+    if policy == "zero1":
+        if params_shapes is None:
+            raise ValueError("moment_shardings(policy='zero1') requires "
+                             "params_shapes to resolve divisible dims")
+        from repro.distributed.sharding import apply_zero1
+        param_specs = apply_zero1(param_specs, params_shapes, mesh, data_axis)
+    kind = "pinned_host" if policy == "host" else "device"
 
     def one(path: str, spec):
-        if policy == "zero1":
-            spec = _zero1_spec(spec, mesh, data_axis, param_specs, path)
-        kind = "pinned_host" if policy == "host" else "device"
         try:
             return NamedSharding(mesh, spec, memory_kind=kind)
         except (ValueError, TypeError):
             return NamedSharding(mesh, spec)
 
     return tree_map_with_path(lambda p, s: one(p, s), param_specs)
-
-
-def _zero1_spec(spec: P, mesh, data_axis: str, _specs, _path):
-    """Add the data axis to the first unsharded dim (moments only).
-    Falls back to the original spec if nothing is divisible — resolved
-    against concrete shapes by distributed/sharding.py at lowering time."""
-    parts = list(spec) if spec else []
-    return P(*parts)  # placeholder; refined in distributed/sharding.apply_zero1
 
 
 @dataclass(frozen=True)

@@ -108,7 +108,7 @@ def block_grad_norms(partition: BlockPartition, grads: dict,
                     acc = acc + jnp.sum(lf * lf, axis=tuple(range(1, lf.ndim)))
             sq = jax.lax.dynamic_update_slice(sq, acc, (g.start,))
         else:
-            s = sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+            s = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
             sq = sq.at[g.start].add(s)
     return jnp.sqrt(sq)
 

@@ -18,7 +18,7 @@ from __future__ import annotations
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import MeshConfig, ModelConfig
+from repro.configs.base import ModelConfig
 from repro.utils.trees import tree_map_with_path
 
 

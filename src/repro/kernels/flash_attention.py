@@ -21,7 +21,6 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BQ = 128
 DEFAULT_BK = 128
@@ -59,10 +58,10 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, bq, bk, scale,
     acc0 = jnp.zeros((bq, d), jnp.float32)
     # causal: only K blocks with j*bk <= (qi+1)*bq - 1 contribute
     upper = jnp.minimum(nk, (qi + 1) * bq // bk) if causal else nk
-    m, l, acc = jax.lax.fori_loop(0, upper, body, (m0, l0, acc0))
-    l = jnp.maximum(l, 1e-30)
-    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
-    lse_ref[0] = (m + jnp.log(l)).astype(jnp.float32)
+    m, lsum, acc = jax.lax.fori_loop(0, upper, body, (m0, l0, acc0))
+    lsum = jnp.maximum(lsum, 1e-30)
+    o_ref[0] = (acc / lsum[:, None]).astype(o_ref.dtype)
+    lse_ref[0] = (m + jnp.log(lsum)).astype(jnp.float32)
 
 
 def flash_attention_fwd(q, k, v, *, bq=DEFAULT_BQ, bk=DEFAULT_BK,

@@ -10,7 +10,6 @@ Grid: (L, R / CHUNK) over stacked [L, R] leaves.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -22,8 +22,8 @@ def _interpret() -> bool:
 
 def _pad_flat(x: jax.Array, chunk: int) -> jax.Array:
     """[L, ...] -> [L, R] with R padded up to a multiple of ``chunk``."""
-    l = x.shape[0]
-    flat = x.reshape(l, -1)
+    nl = x.shape[0]
+    flat = x.reshape(nl, -1)
     r = flat.shape[1]
     pad = (-r) % chunk
     if pad:
@@ -41,9 +41,9 @@ def masked_adamw(p, g, m, v, sel, counts, lr, b1, b2, eps, wd):
     """Leaf-shaped masked AdamW. p,g,m,v: [L, ...]; sel/counts broadcastable
     [L,1,..] or [L]. Returns (p', m', v') in original shapes."""
     shape = p.shape
-    l = shape[0]
-    sel1 = sel.reshape(l)
-    cnt1 = counts.reshape(l)
+    nl = shape[0]
+    sel1 = sel.reshape(nl)
+    cnt1 = counts.reshape(nl)
     pf, gf = _pad_flat(p, _ma.CHUNK), _pad_flat(g, _ma.CHUNK)
     mf, vf = _pad_flat(m, _ma.CHUNK), _pad_flat(v, _ma.CHUNK)
     r_orig = 1

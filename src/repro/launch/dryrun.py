@@ -34,13 +34,16 @@ from repro.models import registry  # noqa: E402
 
 
 def lower_cell(cfg, shape, mesh, *, opt_offload="zero1", microbatch=0,
-               moment_dtype="float32", extra_desc=""):
+               moment_dtype="float32", train_method="adagradselect",
+               extra_desc=""):
     """-> (lowered, compiled, meta) for one (arch, shape, mesh) cell.
 
     Production train defaults: ZeRO-1 moment sharding over the data axis
     (the TPU-native equivalent of the paper's 3.3 host offload — see
     core/offload.py) and microbatch gradient accumulation sized so the
-    per-layer activation residency fits HBM.
+    per-layer activation residency fits HBM. ``train_method`` picks the
+    fine-tuning method from the repro.methods registry (selection family
+    only — the SDS layout follows the masked-AdamW TrainState).
     """
     model = registry.get(cfg)
     baxes = batch_axes_of(mesh)
@@ -49,14 +52,24 @@ def lower_cell(cfg, shape, mesh, *, opt_offload="zero1", microbatch=0,
         microbatch = 8 if cfg.num_experts >= 64 else 4
 
     if shape.kind == "train":
-        from repro.train import step as step_mod
-        sel_cfg = SelectConfig(policy="adagradselect", k_percent=20.0)
+        from repro import methods
+        from repro.configs.base import TrainConfig
+        sel_cfg = SelectConfig(k_percent=20.0)
         opt_cfg = OptimizerConfig(offload=opt_offload, microbatch=microbatch,
                                   moment_dtype=moment_dtype)
-        state_sds = specs_mod.train_state_sds(cfg, mesh, opt_offload,
-                                              moment_dtype)
-        fn = step_mod.make_train_step(cfg, sel_cfg, opt_cfg, mesh=mesh,
-                                      batch_axes=baxes, donate=True)
+        method = methods.build(train_method, TrainConfig(
+            model=cfg, select=sel_cfg, optimizer=opt_cfg))
+        method_sel = getattr(method, "sel_cfg", None)
+        if method_sel is None:
+            raise ValueError(
+                f"--train-method {train_method!r} is not a selection-family "
+                f"method; the dry-run's TrainState SDS layout only covers "
+                f"masked-AdamW methods (full/adagradselect/topk_grad/random/"
+                f"lisa/grass)")
+        state_sds = specs_mod.train_state_sds(
+            cfg, mesh, opt_offload, moment_dtype, policy=method_sel.policy)
+        fn = method.make_step(cfg, opt_cfg, mesh=mesh, batch_axes=baxes,
+                              donate=True)
         with mesh:
             lowered = fn.lower(state_sds, batch_sds)
     elif shape.kind == "prefill":
@@ -91,7 +104,8 @@ def lower_cell(cfg, shape, mesh, *, opt_offload="zero1", microbatch=0,
 
 def run_cell(arch: str, shape_name: str, mesh_name: str, *,
              opt_offload="zero1", microbatch=0, moment_dtype="float32",
-             verbose=True, cfg_override=None, hlo_dir=None):
+             train_method="adagradselect", verbose=True, cfg_override=None,
+             hlo_dir=None):
     cfg = cfg_override or get_config(arch)
     shape = get_shape(shape_name)
     if mesh_name == "multi":
@@ -109,7 +123,8 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, *,
         lowered, compiled, meta = lower_cell(cfg, shape, mesh,
                                              opt_offload=opt_offload,
                                              microbatch=microbatch,
-                                             moment_dtype=moment_dtype)
+                                             moment_dtype=moment_dtype,
+                                             train_method=train_method)
         ma = compiled.memory_analysis()
         cost = compiled.cost_analysis()
         hlo = compiled.as_text()
@@ -164,6 +179,9 @@ def main():
                     choices=["none", "host", "zero1"])
     ap.add_argument("--microbatch", type=int, default=0,
                     help="0 = per-arch default (4; MoE 8)")
+    ap.add_argument("--train-method", default="adagradselect",
+                    help="fine-tuning method for train cells "
+                         "(repro.methods registry, selection family)")
     ap.add_argument("--all", action="store_true",
                     help="run every applicable (arch x shape) cell")
     ap.add_argument("--out", default="results")
@@ -184,6 +202,7 @@ def main():
     for arch, shape_name in cells:
         res = run_cell(arch, shape_name, args.mesh, opt_offload=args.offload,
                        microbatch=args.microbatch,
+                       train_method=args.train_method,
                        hlo_dir=os.path.join(args.out, "hlo"))
         results.append(res)
         tag = f"{arch}_{shape_name}_{args.mesh}" + \

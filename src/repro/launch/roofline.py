@@ -163,7 +163,6 @@ def analyze(cost: dict, hlo_text: str, num_devices: int,
 def model_flops(cfg, shape) -> float:
     """Analytic 'useful' FLOPs for the cell: 6·N_active·T for training,
     2·N_active·T for inference, + exact attention-score/V FLOPs."""
-    import numpy as np
     from repro.core.partition import build_partition  # noqa: F401 (doc link)
     n_active = active_params(cfg)
     gb, s = shape.global_batch, shape.seq_len

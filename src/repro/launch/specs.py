@@ -119,12 +119,13 @@ def params_sds(cfg: ModelConfig, mesh, seed: int = 0):
 
 
 def train_state_sds(cfg: ModelConfig, mesh, opt_offload: str = "none",
-                    moment_dtype=None):
+                    moment_dtype=None, policy: str = "adagradselect"):
     """SDS + shardings for the full TrainState. Moments follow the params'
-    specs, optionally ZeRO-1 resharded or host-offloaded (DESIGN 3.2)."""
+    specs, optionally ZeRO-1 resharded or host-offloaded (DESIGN 3.2).
+    ``policy`` fixes the selection-state pytree layout (per-policy state)."""
     from repro.train import step as step_mod
     moment_dtype = jnp.dtype(moment_dtype or jnp.float32)
-    shapes = step_mod.train_state_shapes(cfg)
+    shapes = step_mod.train_state_shapes(cfg, policy=policy)
     p_sds, p_specs = params_sds(cfg, mesh)
 
     def rep(leaf):  # replicated small state

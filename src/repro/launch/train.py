@@ -7,6 +7,9 @@ CPU-scale (runs here):
 Production (TPU pod; same code, mesh from --mesh):
   python -m repro.launch.train --arch qwen2.5-32b --mesh single \
       --steps 10000 --checkpoint-dir gs://.../ckpts
+
+--method accepts any entry in the repro.methods registry (full,
+adagradselect, topk_grad, random, lora, lisa, grass, ...).
 """
 from __future__ import annotations
 
@@ -17,14 +20,20 @@ import numpy as np
 
 
 def main():
+    from repro import methods
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced config (CPU-runnable)")
     ap.add_argument("--method", default="adagradselect",
-                    choices=["adagradselect", "topk_grad", "random", "all", "lora"])
+                    choices=sorted(methods.available()))
     ap.add_argument("--k", type=float, default=20.0, help="k%% blocks per step")
     ap.add_argument("--lora-rank", type=int, default=128)
+    ap.add_argument("--lisa-interval", type=int, default=20,
+                    help="lisa: steps between mask resamples")
+    ap.add_argument("--grass-temperature", type=float, default=1.0,
+                    help="grass: sampling ∝ cum_norms^T")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--global-batch", type=int, default=32)
@@ -45,9 +54,11 @@ def main():
     mcfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     tcfg = TrainConfig(
         model=mcfg,
-        select=SelectConfig(policy=args.method if args.method != "lora" else "all",
-                            k_percent=args.k,
-                            steps_per_epoch=max(1, args.steps // 4)),
+        method=args.method,
+        select=SelectConfig(k_percent=args.k,
+                            steps_per_epoch=max(1, args.steps // 4),
+                            lisa_interval=args.lisa_interval,
+                            grass_temperature=args.grass_temperature),
         optimizer=OptimizerConfig(lr=args.lr, total_steps=args.steps,
                                   offload=args.offload,
                                   lora_rank=args.lora_rank),
@@ -64,15 +75,18 @@ def main():
         batch_axes = tuple(a for a in mesh.axis_names if a != "model")
 
     from repro.train.trainer import Trainer
-    trainer = Trainer(tcfg, mesh=mesh, batch_axes=batch_axes, method=args.method)
+    trainer = Trainer(tcfg, mesh=mesh, batch_axes=batch_axes)
+    report = trainer.method.trainable_param_report(mcfg, trainer.state)
+    print(f"[{args.method}] trainable {report.num_params_trainable:,}/"
+          f"{report.num_params_total:,} params "
+          f"({report.trainable_fraction:.1%}), "
+          f"opt-state {report.opt_bytes / (1 << 20):.1f} MiB  {report.detail}")
     start = trainer.maybe_restore()
     if start:
         print(f"resumed from step {start}")
     log = trainer.train()
     print(f"final loss: {log.losses[-1]:.4f}  "
           f"mean step time: {np.mean(log.step_times[3:]):.3f}s")
-    if args.eval_every or True:
-        pass
     if args.out:
         with open(args.out, "w") as f:
             json.dump({"losses": log.losses, "step_times": log.step_times,

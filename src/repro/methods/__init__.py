@@ -1,0 +1,22 @@
+"""Pluggable fine-tuning methods: one strategy API, a string-keyed registry.
+
+    from repro import methods
+    m = methods.build("adagradselect", tcfg)     # -> FinetuneMethod
+    state = m.init_state(tcfg.model, tcfg.optimizer, seed)
+    step = m.make_step(tcfg.model, tcfg.optimizer, mesh=...)
+
+Registered out of the box: ``full`` (alias ``all``), ``adagradselect``,
+``topk_grad``, ``random``, ``lisa``, ``grass`` (the masked-selection family,
+see methods/selection.py + core/adagradselect.py) and ``lora``
+(methods/lora.py). See methods/base.py for the protocol and
+methods/registry.py for how to add one.
+"""
+from repro.methods import lora as _lora  # noqa: F401  (registers "lora")
+from repro.methods import selection as _selection  # noqa: F401  (registers family)
+from repro.methods.base import FinetuneMethod, TrainableReport  # noqa: F401
+from repro.methods.registry import (  # noqa: F401
+    available,
+    build,
+    get_method,
+    register,
+)

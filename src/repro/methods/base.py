@@ -1,0 +1,60 @@
+"""The ``FinetuneMethod`` strategy protocol.
+
+A fine-tuning method owns everything the paper varies between its compared
+approaches: what state a training run carries, how one optimization step is
+built, which parameters an evaluation should use, and how many parameters /
+optimizer bytes the method actually trains. The trainer is method-agnostic:
+it only drives data, logging, checkpointing, and the straggler watchdog.
+
+Implementations are registered in ``repro.methods.registry`` under a string
+key; ``registry.build(name, train_cfg)`` resolves a ready-to-use instance.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Protocol, runtime_checkable
+
+from repro.configs.base import ModelConfig, OptimizerConfig
+
+
+@dataclass(frozen=True)
+class TrainableReport:
+    """What a method actually trains (paper §3.3 memory model surface)."""
+
+    method: str
+    num_params_total: int      # all model parameters
+    num_params_trainable: int  # parameters the method may update per run
+    opt_bytes: int             # modeled optimizer-state bytes (m + v)
+    detail: str = ""
+
+    @property
+    def trainable_fraction(self) -> float:
+        return self.num_params_trainable / max(1, self.num_params_total)
+
+
+@runtime_checkable
+class FinetuneMethod(Protocol):
+    """Strategy interface every registered method implements."""
+
+    name: str
+
+    def init_state(self, model_cfg: ModelConfig, opt_cfg: OptimizerConfig,
+                   seed: int = 0) -> dict:
+        """Fresh TrainState pytree (params + optimizer + method state)."""
+        ...
+
+    def make_step(self, model_cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
+                  mesh=None, batch_axes=("data",), use_pallas: bool = False,
+                  donate: bool = True):
+        """-> jitted ``(state, batch) -> (state, metrics)``."""
+        ...
+
+    def eval_params(self, model_cfg: ModelConfig, opt_cfg: OptimizerConfig,
+                    state: dict) -> dict:
+        """Inference-ready parameter pytree for the current state."""
+        ...
+
+    def trainable_param_report(self, model_cfg: ModelConfig,
+                               state: dict) -> TrainableReport:
+        """Trainable-parameter / optimizer-memory accounting."""
+        ...

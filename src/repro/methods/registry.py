@@ -1,0 +1,50 @@
+"""String-keyed fine-tuning method registry (mirrors models/registry.py).
+
+Entries are factories ``(TrainConfig) -> FinetuneMethod`` so a method can
+bind whatever slice of the config it needs (the selection family binds a
+``SelectConfig`` with its policy forced; LoRA needs none). Adding a method:
+
+    @register("mymethod")
+    def _build(tcfg):
+        return MyMethod(...)
+
+and ``Trainer(tcfg, method="mymethod")`` picks it up — no trainer, step, or
+launcher edits.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.configs.base import TrainConfig
+from repro.methods.base import FinetuneMethod
+
+_METHODS: dict[str, Callable[[TrainConfig], FinetuneMethod]] = {}
+
+
+def register(name: str, *aliases: str):
+    """Decorator: register a method factory under ``name`` (+ aliases)."""
+    def deco(factory: Callable[[TrainConfig], FinetuneMethod]):
+        for n in (name, *aliases):
+            if n in _METHODS:
+                raise ValueError(f"fine-tuning method {n!r} already registered")
+            _METHODS[n] = factory
+        return factory
+    return deco
+
+
+def get_method(name: str) -> Callable[[TrainConfig], FinetuneMethod]:
+    """Resolve a registered factory; raises KeyError listing alternatives."""
+    try:
+        return _METHODS[name]
+    except KeyError:
+        raise KeyError(f"unknown fine-tuning method {name!r}; "
+                       f"available: {available()}") from None
+
+
+def build(name: str, tcfg: TrainConfig) -> FinetuneMethod:
+    """Resolve + instantiate a method for one training configuration."""
+    return get_method(name)(tcfg)
+
+
+def available() -> tuple:
+    return tuple(sorted(_METHODS))

@@ -1,0 +1,145 @@
+"""The masked-selection method family: one generic step factory, many
+policies.
+
+``full`` / ``adagradselect`` / ``topk_grad`` / ``random`` / ``lisa`` /
+``grass`` share this implementation — grads -> per-block norms -> in-jit
+policy selection (core/adagradselect registry) -> block-masked AdamW. One
+compiled program serves every selection outcome: masks are runtime inputs,
+so per-step dynamic selection never recompiles.
+
+With ``model_cfg.gate_weight_grads`` the mask is decided BEFORE backward
+from the policy's cumulative signal and frozen blocks' weight grads are
+lax.cond-gated away (DESIGN 3.3); the observed norms are then fed back via
+``adagradselect.observe``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ModelConfig, OptimizerConfig, SelectConfig,
+                                TrainConfig)
+from repro.core import adagradselect, masked_adamw, partition as part_mod
+from repro.core.offload import optimizer_memory_report
+from repro.methods import registry
+from repro.methods.base import TrainableReport
+from repro.models import registry as model_registry
+from repro.optim.schedules import learning_rate
+from repro.train import step as step_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class SelectionMethod:
+    """FinetuneMethod for block-masked fine-tuning under one policy."""
+
+    name: str
+    sel_cfg: SelectConfig
+
+    # -------------------------------------------------------------- state
+    def init_state(self, model_cfg: ModelConfig, opt_cfg: OptimizerConfig,
+                   seed: int = 0) -> dict:
+        return step_mod.init_train_state(
+            model_cfg, seed, moment_dtype=jnp.dtype(opt_cfg.moment_dtype),
+            policy=self.sel_cfg.policy)
+
+    # --------------------------------------------------------------- step
+    def make_step(self, model_cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
+                  mesh=None, batch_axes=("data",), use_pallas: bool = False,
+                  donate: bool = True):
+        """-> jitted (state, batch) -> (state, metrics).
+
+        state = {"params", "opt" {m,v,counts}, "sel" (policy state),
+                 "step" i32}.
+        """
+        sel_cfg = self.sel_cfg
+        model = model_registry.get(model_cfg)
+        partition = part_mod.build_partition(model_cfg)
+        gate = model_cfg.gate_weight_grads
+
+        def step_fn(state, batch):
+            sel_state = state["sel"]
+
+            # gate mode decides the mask BEFORE backward (cumulative signal)
+            pre_mask = None
+            if gate:
+                pre_mask, sel_state = adagradselect.select(
+                    sel_cfg, sel_state,
+                    jnp.zeros((partition.num_blocks,), jnp.float32),
+                    partition.num_blocks)
+
+            def loss_fn(params, mb):
+                masks = (part_mod.layer_masks_dict(partition, pre_mask)
+                         if gate else None)
+                return step_mod.model_loss(model, model_cfg, params, mb,
+                                           mesh=mesh, batch_axes=batch_axes,
+                                           masks=masks)
+
+            (loss, metrics), grads = step_mod.accumulate_grads(
+                loss_fn, state["params"], batch, opt_cfg.microbatch,
+                jnp.dtype(opt_cfg.accum_dtype))
+
+            grads, gnorm = masked_adamw.clip_by_global_norm(
+                grads, opt_cfg.grad_clip)
+            block_norms = part_mod.block_grad_norms(partition, grads,
+                                                    use_pallas=use_pallas)
+            if gate:
+                mask = pre_mask
+                # observe norms post-hoc (only computed blocks contribute)
+                sel_state = adagradselect.observe(sel_cfg, sel_state,
+                                                  block_norms)
+            else:
+                mask, sel_state = adagradselect.select(
+                    sel_cfg, state["sel"], block_norms, partition.num_blocks)
+
+            lr = learning_rate(opt_cfg, state["step"])
+            params, opt = masked_adamw.update(
+                opt_cfg, partition, state["params"], grads, state["opt"],
+                mask, lr, use_pallas=use_pallas)
+            new_state = {"params": params, "opt": opt, "sel": sel_state,
+                         "step": state["step"] + 1}
+            metrics = {**metrics, "loss": loss, "grad_norm": gnorm, "lr": lr,
+                       "epsilon": adagradselect.epsilon(sel_cfg, state["step"]),
+                       "num_selected": jnp.sum(mask.astype(jnp.int32)),
+                       "mask": mask, "block_norms": block_norms}
+            return new_state, metrics
+
+        return jax.jit(step_fn, donate_argnums=(0,) if donate else ())
+
+    # --------------------------------------------------------------- eval
+    def eval_params(self, model_cfg: ModelConfig, opt_cfg: OptimizerConfig,
+                    state: dict) -> dict:
+        return state["params"]
+
+    # ------------------------------------------------------------- report
+    def trainable_param_report(self, model_cfg: ModelConfig,
+                               state: dict) -> TrainableReport:
+        partition = part_mod.build_partition(model_cfg)
+        rep = optimizer_memory_report(partition, state["params"],
+                                      self.sel_cfg.k_percent)
+        k = self.sel_cfg.num_selected(partition.num_blocks)
+        return TrainableReport(
+            method=self.name, num_params_total=rep.p_total,
+            num_params_trainable=rep.p_selected, opt_bytes=rep.mem_selective,
+            detail=f"policy={self.sel_cfg.policy} "
+                   f"k={self.sel_cfg.k_percent:.0f}% "
+                   f"({k}/{partition.num_blocks} blocks/step)")
+
+
+def _selection_factory(policy: str, name: str | None = None, **overrides):
+    def factory(tcfg: TrainConfig) -> SelectionMethod:
+        sel = dataclasses.replace(tcfg.select, policy=policy, **overrides)
+        return SelectionMethod(name=name or policy, sel_cfg=sel)
+    return factory
+
+
+# full FT selects every block every step; k=100% makes the memory/trainable
+# accounting agree with that.
+registry.register("full", "all")(
+    _selection_factory("all", name="full", k_percent=100.0))
+registry.register("adagradselect")(_selection_factory("adagradselect"))
+registry.register("topk_grad")(_selection_factory("topk_grad"))
+registry.register("random")(_selection_factory("random"))
+registry.register("lisa")(_selection_factory("lisa"))
+registry.register("grass")(_selection_factory("grass"))

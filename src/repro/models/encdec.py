@@ -8,7 +8,6 @@ and decoder blocks as separate arms.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -10,6 +10,7 @@ only for stacked groups), merged on the forward as
 from __future__ import annotations
 
 import math
+import zlib
 
 import jax
 import jax.numpy as jnp
@@ -47,7 +48,9 @@ def init_lora(key: jax.Array, params: dict, cfg: ModelConfig, rank: int) -> dict
             continue
         stacked = _is_stacked(path)
         fan_in, fan_out = _fan_split(path, leaf.shape, stacked)
-        k = jax.random.fold_in(key, abs(hash(path)) % (2**31))
+        # crc32, not hash(): string hashing is salted per process, which
+        # would make adapter init irreproducible across runs/hosts.
+        k = jax.random.fold_in(key, zlib.crc32(path.encode()) % (2**31))
         shape_a = (leaf.shape[0], fan_in, rank) if stacked else (fan_in, rank)
         shape_b = (leaf.shape[0], rank, fan_out) if stacked else (rank, fan_out)
         out[path] = {

@@ -1,13 +1,17 @@
-"""Compiled train steps.
+"""Method-agnostic training-step building blocks.
 
-``make_train_step``  — AdaGradSelect / topk_grad / random / full-FT (Alg. 2
-    integrated: grads -> per-block norms -> in-jit selection -> masked AdamW).
-``make_lora_train_step`` — LoRA baseline (merge-on-forward, standard AdamW on
-    adapters only).
+This module owns the pieces every fine-tuning method shares: the masked
+next-token loss, microbatch gradient accumulation (``accumulate_grads``
+scans over batch slices inside the step), and TrainState initialization /
+shape inference for the masked-selection family. The per-method step
+factories themselves live in ``repro.methods`` — ``methods/selection.py``
+for the block-masked family (full / adagradselect / topk_grad / random /
+lisa / grass) and ``methods/lora.py`` for LoRA; they are resolved through
+the string-keyed registry in ``methods/registry.py``.
 
-One compiled program serves every selection outcome (masks are runtime
-inputs). Microbatch gradient accumulation (optimizer.microbatch > 1) scans
-over batch slices inside the step.
+``make_train_step`` / ``make_lora_train_step`` / ``init_lora_state`` remain
+as thin compatibility shims over the registry so existing callers and
+checkpointed workflows keep working.
 """
 from __future__ import annotations
 
@@ -19,9 +23,6 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig, OptimizerConfig, SelectConfig
 from repro.core import adagradselect, masked_adamw, partition as part_mod
 from repro.models import registry
-from repro.optim import adamw as plain_adamw
-from repro.optim import lora as lora_mod
-from repro.optim.schedules import learning_rate
 
 
 # ----------------------------------------------------------------- loss
@@ -57,8 +58,8 @@ def model_loss(model, cfg: ModelConfig, params, batch, *, mesh=None,
     return total, {"ce_loss": loss, "aux_loss": aux}
 
 
-def _accumulate_grads(loss_fn, params, batch, n_micro: int,
-                      accum_dtype=jnp.float32):
+def accumulate_grads(loss_fn, params, batch, n_micro: int,
+                     accum_dtype=jnp.float32):
     """Mean grads over microbatches via lax.scan (gradient accumulation)."""
     if n_micro <= 1:
         return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
@@ -86,122 +87,57 @@ def _accumulate_grads(loss_fn, params, batch, n_micro: int,
     return (loss * scale, met), grads
 
 
-# ----------------------------------------------------------------- steps
-
-
-def make_train_step(model_cfg: ModelConfig, sel_cfg: SelectConfig,
-                    opt_cfg: OptimizerConfig, *, mesh=None,
-                    batch_axes=("data",), use_pallas: bool = False,
-                    donate: bool = True):
-    """-> jitted (state, batch) -> (state, metrics).
-
-    state = {"params", "opt" {m,v,counts}, "sel" (adagradselect state),
-             "step" i32}.
-    """
-    model = registry.get(model_cfg)
-    partition = part_mod.build_partition(model_cfg)
-    gate = model_cfg.gate_weight_grads
-
-    def step_fn(state, batch):
-        sel_state = state["sel"]
-
-        # gate mode decides the mask BEFORE backward (from cumulative signal)
-        pre_mask = None
-        if gate:
-            pre_mask, sel_state = adagradselect.select(
-                sel_cfg, sel_state, jnp.zeros((partition.num_blocks,), jnp.float32),
-                partition.num_blocks)
-
-        def loss_fn(params, mb):
-            masks = (part_mod.layer_masks_dict(partition, pre_mask)
-                     if gate else None)
-            return model_loss(model, model_cfg, params, mb, mesh=mesh,
-                              batch_axes=batch_axes, masks=masks)
-
-        (loss, metrics), grads = _accumulate_grads(
-            loss_fn, state["params"], batch, opt_cfg.microbatch,
-            jnp.dtype(opt_cfg.accum_dtype))
-
-        grads, gnorm = masked_adamw.clip_by_global_norm(grads, opt_cfg.grad_clip)
-        block_norms = part_mod.block_grad_norms(partition, grads,
-                                                use_pallas=use_pallas)
-        if gate:
-            mask = pre_mask
-            # observe norms post-hoc (only computed blocks contribute)
-            sel_state = {**sel_state,
-                         "cum_norms": sel_state["cum_norms"] + block_norms}
-        else:
-            mask, sel_state = adagradselect.select(
-                sel_cfg, state["sel"], block_norms, partition.num_blocks)
-
-        lr = learning_rate(opt_cfg, state["step"])
-        params, opt = masked_adamw.update(
-            opt_cfg, partition, state["params"], grads, state["opt"], mask,
-            lr, use_pallas=use_pallas)
-        new_state = {"params": params, "opt": opt, "sel": sel_state,
-                     "step": state["step"] + 1}
-        metrics = {**metrics, "loss": loss, "grad_norm": gnorm, "lr": lr,
-                   "epsilon": adagradselect.epsilon(sel_cfg, state["step"]),
-                   "num_selected": jnp.sum(mask.astype(jnp.int32)),
-                   "mask": mask, "block_norms": block_norms}
-        return new_state, metrics
-
-    return jax.jit(step_fn, donate_argnums=(0,) if donate else ())
+# ----------------------------------------------------------------- state
 
 
 def init_train_state(model_cfg: ModelConfig, seed: int = 0,
-                     moment_dtype=jnp.float32) -> dict:
+                     moment_dtype=jnp.float32,
+                     policy: str = "adagradselect") -> dict:
+    """TrainState for the masked-selection family: params + masked-AdamW
+    moments + the policy's selection-state pytree."""
     model = registry.get(model_cfg)
     partition = part_mod.build_partition(model_cfg)
     params = model.init(jax.random.PRNGKey(seed), model_cfg)
     return {
         "params": params,
         "opt": masked_adamw.init_opt_state(partition, params, moment_dtype),
-        "sel": adagradselect.init_state(partition.num_blocks, seed),
+        "sel": adagradselect.init_state(partition.num_blocks, seed,
+                                        policy=policy),
         "step": jnp.zeros((), jnp.int32),
     }
 
 
-def train_state_shapes(model_cfg: ModelConfig, seed: int = 0):
-    return jax.eval_shape(partial(init_train_state, model_cfg), seed)
+def train_state_shapes(model_cfg: ModelConfig, seed: int = 0,
+                       policy: str = "adagradselect"):
+    return jax.eval_shape(partial(init_train_state, model_cfg, policy=policy),
+                          seed)
 
 
-# ----------------------------------------------------------------- LoRA
+# ----------------------------------------------- compatibility shims
+
+
+def make_train_step(model_cfg: ModelConfig, sel_cfg: SelectConfig,
+                    opt_cfg: OptimizerConfig, *, mesh=None,
+                    batch_axes=("data",), use_pallas: bool = False,
+                    donate: bool = True):
+    """Shim -> methods/selection.py (kept for existing callers)."""
+    from repro.methods.selection import SelectionMethod
+    method = SelectionMethod(name=sel_cfg.policy, sel_cfg=sel_cfg)
+    return method.make_step(model_cfg, opt_cfg, mesh=mesh,
+                            batch_axes=batch_axes, use_pallas=use_pallas,
+                            donate=donate)
 
 
 def make_lora_train_step(model_cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
                          mesh=None, batch_axes=("data",), donate: bool = True):
-    """Baseline: adapters trained with standard AdamW; base weights frozen.
-    state = {"base", "lora", "opt", "step"}."""
-    model = registry.get(model_cfg)
-    rank, alpha = opt_cfg.lora_rank, opt_cfg.lora_alpha
-
-    def step_fn(state, batch):
-        def loss_fn(lp, mb):
-            merged = lora_mod.merge(state["base"], lp, model_cfg, rank, alpha)
-            return model_loss(model, model_cfg, merged, mb, mesh=mesh,
-                              batch_axes=batch_axes)
-
-        (loss, metrics), grads = _accumulate_grads(
-            loss_fn, state["lora"], batch, opt_cfg.microbatch)
-        grads, gnorm = masked_adamw.clip_by_global_norm(grads, opt_cfg.grad_clip)
-        lr = learning_rate(opt_cfg, state["step"])
-        lora_p, opt = plain_adamw.update(opt_cfg, state["lora"], grads,
-                                         state["opt"], lr)
-        new_state = {"base": state["base"], "lora": lora_p, "opt": opt,
-                     "step": state["step"] + 1}
-        metrics = {**metrics, "loss": loss, "grad_norm": gnorm, "lr": lr}
-        return new_state, metrics
-
-    return jax.jit(step_fn, donate_argnums=(0,) if donate else ())
+    """Shim -> methods/lora.py (kept for existing callers)."""
+    from repro.methods.lora import LoRAMethod
+    return LoRAMethod().make_step(model_cfg, opt_cfg, mesh=mesh,
+                                  batch_axes=batch_axes, donate=donate)
 
 
 def init_lora_state(model_cfg: ModelConfig, opt_cfg: OptimizerConfig,
                     seed: int = 0) -> dict:
-    model = registry.get(model_cfg)
-    base = model.init(jax.random.PRNGKey(seed), model_cfg)
-    lora_p = lora_mod.init_lora(jax.random.PRNGKey(seed + 1), base, model_cfg,
-                                opt_cfg.lora_rank)
-    return {"base": base, "lora": lora_p,
-            "opt": plain_adamw.init_opt_state(lora_p),
-            "step": jnp.zeros((), jnp.int32)}
+    """Shim -> methods/lora.py (kept for existing callers)."""
+    from repro.methods.lora import LoRAMethod
+    return LoRAMethod().init_state(model_cfg, opt_cfg, seed)

@@ -1,13 +1,25 @@
 """Training loop: logging, checkpointing, straggler watchdog, eval, restore.
 
-Runs the same code path single-device (tests/examples) and distributed
+Method-agnostic: the fine-tuning method (full FT, AdaGradSelect and the
+other selection policies, LoRA, ...) is resolved through the
+``repro.methods`` registry, which supplies the TrainState, the compiled step
+function, and eval/accounting hooks — the trainer never inspects the method
+name. Runs the same code path single-device (tests/examples) and distributed
 (launch/train.py passes a mesh + sharded state). Fault-tolerance contract:
   * `checkpoint_every` saves are async + atomic, include the full TrainState
-    (bandit statistics included) and the data cursor IS the step counter;
+    (method state included) and the data cursor IS the step counter;
   * on start, `maybe_restore()` resumes from the latest checkpoint;
   * a step-time EWMA watchdog flags stragglers (> tau * EWMA) and calls the
     configurable `on_straggler` hook (default: log; production: abort to the
     last checkpoint so the scheduler can replace the slow host).
+
+Scalar materialization is deferred to `log_every` boundaries: between
+boundaries the loop only enqueues compiled steps (losses are kept as device
+scalars), and at a boundary a single `block_until_ready` drains the pipeline
+so the per-step timing EWMA stays honest (boundary timings are the window
+average). `log_every=0` — or passing a custom `on_straggler` hook, which
+needs true per-step times so a single slow step is never averaged away —
+syncs every step (the exact-timing mode benchmarks rely on).
 """
 from __future__ import annotations
 
@@ -17,10 +29,10 @@ from dataclasses import dataclass, field
 import jax
 import numpy as np
 
+from repro import methods
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs.base import TrainConfig
 from repro.data import loader as data_loader
-from repro.train import step as step_mod
 
 
 @dataclass
@@ -33,26 +45,21 @@ class TrainLog:
 
 class Trainer:
     def __init__(self, tcfg: TrainConfig, *, mesh=None, batch_axes=("data",),
-                 method: str = "adagradselect", data_source=None,
+                 method: str | None = None, data_source=None,
                  batch_shardings=None, on_straggler=None, use_pallas=False):
         self.tcfg = tcfg
         self.mesh = mesh
-        self.method = method
+        self.method_name = method or tcfg.method
+        self.method = methods.build(self.method_name, tcfg)
+        self.sel_cfg = getattr(self.method, "sel_cfg", tcfg.select)
         self.batch_shardings = batch_shardings
+        self._watchdog_active = on_straggler is not None
         self.on_straggler = on_straggler or (lambda step, dt, ewma: None)
-        mcfg = tcfg.model
-        if method == "lora":
-            self.state = step_mod.init_lora_state(mcfg, tcfg.optimizer, tcfg.seed)
-            self.step_fn = step_mod.make_lora_train_step(
-                mcfg, tcfg.optimizer, mesh=mesh, batch_axes=batch_axes)
-        else:
-            sel = tcfg.select if method == "adagradselect" else \
-                tcfg.select.__class__(**{**tcfg.select.__dict__, "policy": method})
-            self.sel_cfg = sel
-            self.state = step_mod.init_train_state(mcfg, tcfg.seed)
-            self.step_fn = step_mod.make_train_step(
-                mcfg, sel, tcfg.optimizer, mesh=mesh, batch_axes=batch_axes,
-                use_pallas=use_pallas)
+        self.state = self.method.init_state(tcfg.model, tcfg.optimizer,
+                                            tcfg.seed)
+        self.step_fn = self.method.make_step(
+            tcfg.model, tcfg.optimizer, mesh=mesh, batch_axes=batch_axes,
+            use_pallas=use_pallas)
         self.data = data_source or data_loader.make_source(
             "synthetic_math", seq_len=tcfg.seq_len,
             global_batch=tcfg.global_batch, seed=tcfg.seed)
@@ -78,24 +85,34 @@ class Trainer:
         tcfg = self.tcfg
         steps = steps if steps is not None else tcfg.steps
         step0 = start_step if start_step is not None else int(self.state["step"])
+        last = step0 + steps - 1
+        pending = []  # device-scalar losses since the last sync boundary
+        t0 = time.perf_counter()
         for step in range(step0, step0 + steps):
             batch = self._device_batch(self.data.batch_at(step))
-            t0 = time.perf_counter()
+            if not pending:
+                t0 = time.perf_counter()
             self.state, metrics = self.step_fn(self.state, batch)
-            loss = float(metrics["loss"])  # blocks; keeps timing honest
-            dt = time.perf_counter() - t0
-
-            # straggler watchdog (EWMA of step time, warmup-excluded)
-            if step > step0 + 2:
-                self._ewma = dt if self._ewma is None else \
-                    0.9 * self._ewma + 0.1 * dt
-                if self._ewma and dt > tcfg.straggler_tau * self._ewma:
-                    self.on_straggler(step, dt, self._ewma)
-
             self.log.steps.append(step)
-            self.log.losses.append(loss)
-            self.log.step_times.append(dt)
-            if tcfg.log_every and step % tcfg.log_every == 0:
+            pending.append(metrics["loss"])
+
+            at_log = tcfg.log_every and step % tcfg.log_every == 0
+            if (at_log or step == last or not tcfg.log_every
+                    or self._watchdog_active):
+                jax.block_until_ready(metrics["loss"])
+                dt = (time.perf_counter() - t0) / len(pending)
+                self.log.losses.extend(float(np.asarray(x)) for x in pending)
+                self.log.step_times.extend([dt] * len(pending))
+                pending = []
+
+                # straggler watchdog (EWMA of step time, warmup-excluded)
+                if step > step0 + 2:
+                    self._ewma = dt if self._ewma is None else \
+                        0.9 * self._ewma + 0.1 * dt
+                    if self._ewma and dt > tcfg.straggler_tau * self._ewma:
+                        self.on_straggler(step, dt, self._ewma)
+
+            if at_log:
                 small = {k: np.asarray(v).tolist() for k, v in metrics.items()
                          if np.ndim(v) == 0}
                 self.log.metrics.append({"step": step, **small})

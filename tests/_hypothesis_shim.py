@@ -1,0 +1,64 @@
+"""Property-test shim: re-exports `hypothesis` when installed, otherwise a
+tiny deterministic stand-in so the suite still collects and runs.
+
+The fallback implements only what this repo's tests use — ``@given`` with
+keyword strategies, ``@settings(max_examples=..., deadline=...)``, and the
+``integers`` / ``floats`` / ``sampled_from`` strategies. Each decorated test
+runs ``max_examples`` times with samples drawn from a fixed-seed PRNG, so
+failures reproduce. Install the real dependency (requirements-dev.txt) for
+shrinking, edge-case generation, and the full strategy library.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_MAX_EXAMPLES = 10
+    _SEED = 0xADA6
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rnd: random.Random):
+            return self._draw(rnd)
+
+    class st:  # noqa: N801 — mimics `hypothesis.strategies as st`
+        @staticmethod
+        def integers(min_value=0, max_value=2**30):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: r.choice(elements))
+
+    def settings(max_examples=None, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples or _DEFAULT_MAX_EXAMPLES
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+                rnd = random.Random(_SEED)
+                for _ in range(n):
+                    drawn = {k: s.draw(rnd) for k, s in strategies.items()}
+                    fn(*args, **kwargs, **drawn)
+            # no functools.wraps: pytest must NOT see the original signature,
+            # or it would treat the strategy kwargs as fixtures
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

@@ -2,8 +2,7 @@
 import json
 
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.data import loader, synthetic, tokenizer
 

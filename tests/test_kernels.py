@@ -37,13 +37,13 @@ class TestMaskedAdamW:
     @pytest.mark.parametrize("pdtype", [jnp.float32, jnp.bfloat16])
     def test_sweep(self, shape, pdtype):
         ks = jax.random.split(jax.random.PRNGKey(0), 4)
-        l = shape[0]
+        nl = shape[0]
         p = jax.random.normal(ks[0], shape).astype(pdtype)
         g = (0.1 * jax.random.normal(ks[1], shape)).astype(pdtype)
         m = 0.01 * jax.random.normal(ks[2], shape)
         v = 0.001 * jnp.abs(jax.random.normal(ks[3], shape))
-        sel = jnp.asarray(np.arange(l) % 2, jnp.float32)
-        cnt = jnp.arange(1, l + 1, dtype=jnp.float32)
+        sel = jnp.asarray(np.arange(nl) % 2, jnp.float32)
+        cnt = jnp.arange(1, nl + 1, dtype=jnp.float32)
         args = (1e-2, 0.9, 0.999, 1e-8, 0.01)
         po, mo, vo = ops.masked_adamw(p, g, m, v, sel, cnt, *args)
         l2 = shape[0]

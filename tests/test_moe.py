@@ -1,8 +1,6 @@
 """MoE: dense oracle semantics + EP (shard_map all-to-all) equivalence."""
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import ModelConfig
 from repro.models.layers import moe

@@ -3,8 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.configs.base import SelectConfig
 from repro.core import adagradselect, selection
@@ -62,7 +61,7 @@ class TestEpsilon:
 class TestSelect:
     def _run(self, policy, steps=40, nb=10, k=20.0, **kw):
         cfg = SelectConfig(policy=policy, k_percent=k, steps_per_epoch=20, **kw)
-        st_ = adagradselect.init_state(nb, seed=3)
+        st_ = adagradselect.init_state(nb, seed=3, policy=policy)
         norms = jnp.asarray(np.linspace(2.0, 0.1, nb), jnp.float32)
         masks = []
         for _ in range(steps):
@@ -70,10 +69,40 @@ class TestSelect:
             masks.append(np.asarray(m))
         return np.stack(masks), st_, cfg
 
-    @pytest.mark.parametrize("policy", ["adagradselect", "topk_grad", "random"])
+    @pytest.mark.parametrize("policy", ["adagradselect", "topk_grad", "random",
+                                        "lisa", "grass"])
     def test_exact_k_selected(self, policy):
         masks, _, cfg = self._run(policy)
         assert (masks.sum(1) == cfg.num_selected(10)).all()
+
+    def test_unknown_policy_raises(self):
+        with pytest.raises(ValueError, match="unknown selection policy"):
+            adagradselect.get_policy("does_not_exist")
+
+    def test_per_policy_state_pytrees(self):
+        s_ada = adagradselect.init_state(6, policy="adagradselect")
+        s_rnd = adagradselect.init_state(6, policy="random")
+        s_grs = adagradselect.init_state(6, policy="grass")
+        assert {"freq", "cum_norms"} <= set(s_ada)
+        assert "freq" not in s_rnd and "cum_norms" not in s_rnd
+        assert "cum_norms" in s_grs and "freq" not in s_grs
+
+    def test_lisa_resamples_on_interval_only(self):
+        masks, _, _ = self._run("lisa", steps=40, k=30.0, lisa_interval=10)
+        for t in range(40):
+            if t % 10 != 0:  # held fixed inside the interval
+                assert (masks[t] == masks[t - 1]).all(), t
+        # across 4 resamples of 3-of-10 blocks, at least one change expected
+        boundaries = masks[::10]
+        assert any((boundaries[i] != boundaries[i - 1]).any()
+                   for i in range(1, len(boundaries)))
+
+    def test_grass_tracks_cumulative_signal(self):
+        masks, st_, _ = self._run("grass", steps=150, k=20.0)
+        counts = masks.sum(0)
+        # norms are descending -> top-2 arms should dominate the draws
+        assert counts[:2].sum() > counts[5:].sum(), counts
+        assert "cum_norms" in st_ and float(st_["cum_norms"][0]) > 0
 
     def test_all_policy_is_fft(self):
         masks, _, _ = self._run("all")

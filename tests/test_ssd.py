@@ -3,8 +3,7 @@ invariance (hypothesis)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.configs.base import ModelConfig
 from repro.models.layers import ssm

@@ -1,7 +1,6 @@
 """End-to-end behaviour: the paper's qualitative claims on the synthetic
 math task, selection dynamics, serving engine, offload accounting."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -10,7 +9,7 @@ from repro.configs.base import (ModelConfig, OptimizerConfig, SelectConfig,
                                 TrainConfig)
 from repro.core import build_partition
 from repro.core.offload import optimizer_memory_report
-from repro.data.synthetic import EOS, MathTaskConfig
+from repro.data.synthetic import EOS
 from repro.models import registry
 from repro.train.trainer import Trainer
 
