@@ -1,0 +1,182 @@
+"""Serve-engine benchmark: continuous batching vs legacy static batching.
+
+Two workloads on the same smoke arch (CPU, random weights):
+
+  uniform    -- B same-length prompts, all present at t=0, no EOS: the
+                engine's chunked decode must be at least as fast as the
+                legacy per-token loop (tok/s).
+  staggered  -- mixed prompt lengths, arrivals spread over engine steps,
+                early-EOS rows (EOS = the model's greedy attractor token):
+                goodput (useful generated tokens / wall second). Legacy
+                static batching pads every prompt to the longest and decodes
+                the full budget for every row even after EOS; the engine
+                frees slots at EOS and backfills, so its goodput must be
+                strictly higher.
+
+  PYTHONPATH=src python benchmarks/bench_serve.py --arch llama3.2-1b
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from collections import Counter
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import registry
+from repro.serve.engine import ServeEngine, generate, generate_legacy
+from repro.serve.scheduler import Request
+
+
+def _tokens(rng, n, s, vocab):
+    return rng.integers(1, vocab, (n, s)).astype(np.int32)
+
+
+def bench_uniform(cfg, params, *, batch, prompt_len, new_tokens, chunk,
+                  repeats):
+    rng = np.random.default_rng(0)
+    b = {"tokens": _tokens(rng, batch, prompt_len, cfg.vocab_size)}
+    max_len = prompt_len + new_tokens
+    kw = dict(max_new_tokens=new_tokens, max_len=max_len)
+
+    generate_legacy(params, cfg, b, **kw)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        generate_legacy(params, cfg, b, **kw)
+    t_leg = (time.perf_counter() - t0) / repeats
+
+    generate(params, cfg, b, decode_chunk=chunk, **kw)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        generate(params, cfg, b, decode_chunk=chunk, **kw)
+    t_eng = (time.perf_counter() - t0) / repeats
+
+    toks = batch * new_tokens
+    return toks / t_leg, toks / t_eng
+
+
+def _attractor_token(cfg, params, prompt_len, new_tokens):
+    """Greedy decoding with random weights collapses to a repeated token;
+    use it as EOS so staggered rows genuinely terminate early."""
+    rng = np.random.default_rng(7)
+    b = {"tokens": _tokens(rng, 4, prompt_len, cfg.vocab_size)}
+    raw = generate_legacy(params, cfg, b, max_new_tokens=new_tokens,
+                          max_len=prompt_len + new_tokens)
+    return int(Counter(raw.flatten().tolist()).most_common(1)[0][0])
+
+
+def bench_staggered(cfg, params, *, num_requests, prompt_lens, new_tokens,
+                    chunk, num_slots, stagger, repeats):
+    rng = np.random.default_rng(1)
+    lens = [prompt_lens[i % len(prompt_lens)] for i in range(num_requests)]
+    prompts = [_tokens(rng, 1, ln, cfg.vocab_size)[0] for ln in lens]
+    max_prompt = max(lens)
+    max_len = max_prompt + new_tokens
+    eos = _attractor_token(cfg, params, max_prompt, new_tokens)
+
+    def make_requests():
+        return [Request(uid=i, tokens=prompts[i], max_new_tokens=new_tokens,
+                        arrival=i * stagger) for i in range(num_requests)]
+
+    def run_engine():
+        eng = ServeEngine(cfg, params, max_len=max_len, num_slots=num_slots,
+                          eos_id=eos, decode_chunk=chunk)
+        res = eng.run(make_requests())
+        return sum(len(v) for v in res.values())
+
+    run_engine()  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        useful_eng = run_engine()
+    t_eng = (time.perf_counter() - t0) / repeats
+
+    # legacy static batching: every prompt right-padded to the longest, the
+    # whole set as back-to-back full batches of num_slots, full budget
+    # decoded for every row (EOS only masked post-hoc)
+    padded = np.stack([np.pad(p, (0, max_prompt - len(p))) for p in prompts])
+
+    def run_legacy():
+        useful = 0
+        for start in range(0, num_requests, num_slots):
+            rows = padded[start:start + num_slots]
+            out = generate_legacy(params, cfg, {"tokens": rows},
+                                  max_new_tokens=new_tokens, max_len=max_len,
+                                  eos_id=eos)
+            for row in out:
+                hits = np.flatnonzero(row == eos)
+                useful += int(hits[0]) + 1 if len(hits) else new_tokens
+        return useful
+
+    run_legacy()  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        useful_leg = run_legacy()
+    t_leg = (time.perf_counter() - t0) / repeats
+
+    return (useful_leg / t_leg, useful_eng / t_eng, useful_leg, useful_eng,
+            eos)
+
+
+def run(arch: str = "llama3.2-1b", **_):
+    """CSV rows for benchmarks/run.py: µs per generated token + tok/s."""
+    cfg = get_smoke_config(arch).replace(ssm_chunk=16)
+    params = registry.get(cfg).init(jax.random.PRNGKey(0), cfg)
+    leg, eng = bench_uniform(cfg, params, batch=4, prompt_len=16,
+                             new_tokens=16, chunk=8, repeats=2)
+    gl, ge, _, _, _ = bench_staggered(cfg, params, num_requests=8,
+                                      prompt_lens=[8, 12, 16], new_tokens=16,
+                                      chunk=8, num_slots=4, stagger=1,
+                                      repeats=2)
+    return [
+        ("serve/uniform_legacy", 1e6 / leg, f"{leg:.1f} tok/s"),
+        ("serve/uniform_engine", 1e6 / eng, f"{eng:.1f} tok/s"),
+        ("serve/staggered_legacy", 1e6 / gl, f"{gl:.1f} useful tok/s"),
+        ("serve/staggered_engine", 1e6 / ge, f"{ge:.1f} useful tok/s"),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--decode-chunk", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--stagger", type=int, default=1)
+    ap.add_argument("--repeats", type=int, default=3)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch).replace(ssm_chunk=16)
+    params = registry.get(cfg).init(jax.random.PRNGKey(0), cfg)
+
+    leg, eng = bench_uniform(cfg, params, batch=args.batch,
+                             prompt_len=args.prompt_len,
+                             new_tokens=args.new_tokens,
+                             chunk=args.decode_chunk, repeats=args.repeats)
+    print(f"[{args.arch}] uniform arrivals: batch={args.batch} "
+          f"prompt={args.prompt_len} new={args.new_tokens}")
+    print(f"  legacy static batch: {leg:9.1f} tok/s")
+    print(f"  engine:              {eng:9.1f} tok/s   ({eng / leg:.2f}x)  "
+          f"{'OK (>= legacy)' if eng >= leg else 'REGRESSION'}")
+
+    # halves keep ssm prefill chunking valid (len <= ssm_chunk or divisible)
+    lens = sorted({args.prompt_len, args.prompt_len // 2})
+    gl, ge, ul, ue, eos = bench_staggered(
+        cfg, params, num_requests=args.requests, prompt_lens=lens,
+        new_tokens=args.new_tokens, chunk=args.decode_chunk,
+        num_slots=args.batch, stagger=args.stagger, repeats=args.repeats)
+    print(f"[{args.arch}] staggered arrivals: {args.requests} requests, "
+          f"prompt lens {lens}, eos={eos} (attractor), slots={args.batch}")
+    print(f"  legacy static batch: {gl:9.1f} useful tok/s "
+          f"({ul} useful tokens)")
+    print(f"  engine:              {ge:9.1f} useful tok/s "
+          f"({ue} useful tokens)  ({ge / gl:.2f}x)  "
+          f"{'OK (goodput > legacy)' if ge > gl else 'REGRESSION'}")
+    return 0 if (eng >= leg and ge > gl) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -14,7 +14,7 @@ def main() -> None:
     rows = []
 
     from benchmarks import (bench_fig1, bench_fig3, bench_fig4, bench_kernels,
-                            bench_table1, roofline_table)
+                            bench_serve, bench_table1, roofline_table)
 
     for mod, kwargs in (
         (bench_kernels, {}),
@@ -22,6 +22,7 @@ def main() -> None:
         (bench_fig1, {"steps": max(40, steps // 2)}),
         (bench_fig3, {"steps": steps}),
         (bench_fig4, {"steps": steps}),
+        (bench_serve, {}),
         (roofline_table, {}),
     ):
         try:

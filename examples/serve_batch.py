@@ -1,5 +1,6 @@
-"""Batched serving demo: prefill a batch of prompts, decode with a shared
-KV cache, report tokens/sec; runs any smoke arch (--arch).
+"""Batched serving demo: continuous-batching engine (prefill into slots +
+chunked decode with a persistent KV cache), report tokens/sec; runs any
+smoke arch (--arch).
 
   PYTHONPATH=src python examples/serve_batch.py --arch llama3.2-1b
   PYTHONPATH=src python examples/serve_batch.py --arch mamba2-2.7b
@@ -21,6 +22,7 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=48)
+    ap.add_argument("--decode-chunk", type=int, default=8)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch).replace(ssm_chunk=32)
@@ -37,10 +39,16 @@ def main():
             rng, (args.batch, args.prompt_len // cfg.frontend_len_ratio,
                   cfg.d_model)))
 
-    # warmup (compile)
-    generate(params, cfg, batch, max_new_tokens=2)
+    prefix = cfg.num_frontend_tokens if cfg.family == "vlm" else 0
+    max_len = args.prompt_len + prefix + args.new_tokens
+    kw = dict(max_new_tokens=args.new_tokens, max_len=max_len,
+              decode_chunk=args.decode_chunk)
+
+    # warmup (compile) with the SAME max_len/shapes so the timed call is
+    # pure steady state
+    generate(params, cfg, batch, **kw)
     t0 = time.perf_counter()
-    out = generate(params, cfg, batch, max_new_tokens=args.new_tokens)
+    out = generate(params, cfg, batch, **kw)
     dt = time.perf_counter() - t0
     print(f"[{args.arch}] batch={args.batch} prompt={args.prompt_len} "
           f"new={args.new_tokens}")

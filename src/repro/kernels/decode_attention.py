@@ -4,7 +4,9 @@ Layout: q [BH, D], k/v [BH, S, D] (GQA expanded outside, like
 flash_attention.py). Grid (BH, S/BK) with the KV-block axis innermost
 (sequential), carrying online-softmax stats (m, l, acc) in VMEM scratch —
 a single pass over the cache at HBM bandwidth, which is the roofline for
-decode. ``valid_len`` masks unwritten cache slots.
+decode. ``valid_len`` masks unwritten cache slots; it may be a per-row
+vector so continuous-batching slots at mixed progress each attend over
+their own cache length.
 """
 from __future__ import annotations
 
@@ -50,17 +52,21 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 
 def decode_attention(q, k, v, valid_len, *, bk=DEFAULT_BK, interpret=True):
-    """q: [BH, D]; k, v: [BH, S, D]; valid_len: scalar i32 -> o [BH, D]."""
+    """q: [BH, D]; k, v: [BH, S, D]; valid_len: scalar i32 or [BH] i32
+    vector (per-row valid cache length) -> o [BH, D]."""
     bh, s, d = k.shape
     bk = min(bk, s)
     assert s % bk == 0, (s, bk)
     scale = d ** -0.5
-    vlen = jnp.asarray(valid_len, jnp.int32).reshape(1)
+    vlen = jnp.asarray(valid_len, jnp.int32)
+    if vlen.ndim == 0:
+        vlen = jnp.full((bh,), vlen, jnp.int32)
+    assert vlen.shape == (bh,), (vlen.shape, bh)
     return pl.pallas_call(
         partial(_kernel, bk=bk, scale=scale),
         grid=(bh, s // bk),
         in_specs=[
-            pl.BlockSpec((1,), lambda b, j: (0,)),
+            pl.BlockSpec((1,), lambda b, j: (b,)),
             pl.BlockSpec((1, d), lambda b, j: (b, 0)),
             pl.BlockSpec((1, bk, d), lambda b, j: (b, j, 0)),
             pl.BlockSpec((1, bk, d), lambda b, j: (b, j, 0)),

@@ -68,12 +68,15 @@ def flash_attention(q, k, v, *, causal=True):
 
 
 def decode_attention(q, k, v, valid_len):
-    """q: [B, 1, H, D]; k,v: [B, S, H, D] (head-expanded cache) ->
-    [B, 1, H, D]."""
+    """q: [B, 1, H, D]; k,v: [B, S, H, D] (head-expanded cache);
+    valid_len: scalar i32 or per-row [B] vector -> [B, 1, H, D]."""
     b, s, h, d = k.shape
     qf = q.reshape(b, h, d).reshape(b * h, d)
     fold = lambda t: t.transpose(0, 2, 1, 3).reshape(b * h, s, d)  # noqa: E731
-    o = _dec.decode_attention(qf, fold(k), fold(v), valid_len,
+    vl = jnp.asarray(valid_len, jnp.int32)
+    if vl.ndim:  # [B] -> [B*H], b-major to match the head fold
+        vl = jnp.repeat(vl, h)
+    o = _dec.decode_attention(qf, fold(k), fold(v), vl,
                               interpret=_interpret())
     return o.reshape(b, 1, h, d)
 

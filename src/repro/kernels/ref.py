@@ -43,14 +43,18 @@ def flash_attention(q, k, v, *, causal=True):
 
 
 def decode_attention(q, k, v, valid_len):
-    """q: [B, H, D]; k,v: [B, H, S, D]; valid_len: scalar — masked single-
-    query attention."""
+    """q: [B, H, D]; k,v: [B, H, S, D]; valid_len: scalar or per-row [B]
+    vector — masked single-query attention."""
     s = k.shape[2]
     scale = q.shape[-1] ** -0.5
     scores = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
                         k.astype(jnp.float32)) * scale
-    mask = jnp.arange(s) < valid_len
-    scores = jnp.where(mask[None, None], scores, -1e30)
+    vl = jnp.asarray(valid_len)
+    if vl.ndim:
+        mask = jnp.arange(s)[None, None, :] < vl[:, None, None]
+    else:
+        mask = (jnp.arange(s) < vl)[None, None, :]
+    scores = jnp.where(mask, scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhk,bhkd->bhd", probs, v.astype(jnp.float32))
     return out.astype(q.dtype)

@@ -1,7 +1,11 @@
-"""Serving launcher: batched prefill + decode of a (smoke or full) model.
+"""Serving launcher: continuous-batching engine over a (smoke or full) model.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
       --batch 4 --prompt-len 16 --new-tokens 32
+
+Reports compile time (warmup call) and steady-state tok/s separately — the
+pre-warmup number was dominated by XLA compile and meaningless as a
+throughput figure.
 """
 from __future__ import annotations
 
@@ -20,6 +24,7 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--decode-chunk", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -41,12 +46,24 @@ def main():
         batch["src_embeds"] = np.asarray(jax.random.normal(
             rng, (args.batch, args.prompt_len, cfg.d_model)) * 0.02)
 
+    prefix = cfg.num_frontend_tokens if cfg.family == "vlm" else 0
+    max_len = args.prompt_len + prefix + args.new_tokens
+    kw = dict(max_new_tokens=args.new_tokens, max_len=max_len,
+              temperature=args.temperature, rng=rng,
+              decode_chunk=args.decode_chunk)
+
+    # warmup: same shapes/max_len as the timed call, so every compile
+    # (prefill, decode chunk, insert) lands here
     t0 = time.perf_counter()
-    out = generate(params, cfg, batch, max_new_tokens=args.new_tokens,
-                   temperature=args.temperature, rng=rng)
+    generate(params, cfg, batch, **kw)
+    t_compile = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    out = generate(params, cfg, batch, **kw)
     dt = time.perf_counter() - t0
     tps = args.batch * args.new_tokens / dt
-    print(f"generated {out.shape} in {dt:.2f}s ({tps:.1f} tok/s)")
+    print(f"compile+first-call: {t_compile:.2f}s")
+    print(f"steady state: generated {out.shape} in {dt:.2f}s ({tps:.1f} tok/s)")
     print("first row:", out[0][:24])
     return 0
 

@@ -48,13 +48,21 @@ def dec_block_init(key, cfg: ModelConfig):
     }
 
 
-def _cross_attend(p_attn, cfg: ModelConfig, x, enc_kv):
-    """Cross-attention: q from x, (k, v) precomputed from encoder output."""
+def _cross_attend(p_attn, cfg: ModelConfig, x, enc_kv, src_len=None):
+    """Cross-attention: q from x, (k, v) precomputed from encoder output.
+    ``src_len`` ([B] or scalar) masks cache positions beyond each row's true
+    encoder length (the slot cache pads sources to max_len // ratio)."""
     q = jnp.einsum("bsd,dhk->bshk", x, p_attn["wq"])
     if cfg.attn_bias:
         q = q + p_attn["bq"]
     k, v = enc_kv
-    out = core.full_attention(q, k, v, causal=False)
+    mask = None
+    if src_len is not None:
+        sl = jnp.asarray(src_len)
+        sl = sl[:, None] if sl.ndim else sl
+        mask = jnp.broadcast_to(jnp.arange(k.shape[1])[None, :] < sl,
+                                (x.shape[0], k.shape[1]))
+    out = core.full_attention(q, k, v, causal=False, kv_len_mask=mask)
     return jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p_attn["wo"])
 
 
@@ -145,7 +153,8 @@ def init_cache(cfg: ModelConfig, batch_size: int, max_len: int) -> dict:
     ld = cfg.num_layers
     src_len = max_len // cfg.frontend_len_ratio
     return {
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch_size,), jnp.int32),
+        "src_len": jnp.zeros((batch_size,), jnp.int32),
         "k": jnp.zeros((ld, batch_size, max_len, kvh, dh), dt),
         "v": jnp.zeros((ld, batch_size, max_len, kvh, dh), dt),
         "ck": jnp.zeros((ld, batch_size, src_len, kvh, dh), dt),
@@ -177,15 +186,29 @@ def prefill(params: dict, cfg: ModelConfig, batch: dict, max_len: int, *,
 
     x, (kv, ckv) = jax.lax.scan(body, x, params["dec_layers"])
     cache["k"], cache["v"] = kv
+    s_src = enc_out.shape[1]
+    src_cache = max_len // cfg.frontend_len_ratio
+    if s_src < src_cache:  # pad to the slot-cache length; decode masks by
+        # per-slot src_len, so padding never changes the attention output
+        pad = [(0, 0), (0, 0), (0, src_cache - s_src), (0, 0), (0, 0)]
+        ckv = (jnp.pad(ckv[0], pad), jnp.pad(ckv[1], pad))
     cache["ck"], cache["cv"] = ckv
+    cache["src_len"] = jnp.full((b,), s_src, jnp.int32)
     x = norms.apply(params["final_norm"], x, cfg.norm_eps)
-    cache["pos"] = jnp.asarray(s, jnp.int32)
+    cache["pos"] = jnp.full((b,), s, jnp.int32)
     return _logits(params, cfg, x[:, -1:, :])[:, 0], cache
+
+
+def insert_slots(cache: dict, src: dict, slots):
+    from repro.models import lm
+    return lm.insert_slots(cache, src, slots)
 
 
 def decode_step(params: dict, cfg: ModelConfig, tokens, cache: dict, *,
                 mesh=None, batch_axes=("data",)):
-    pos = cache["pos"]
+    pos = jnp.broadcast_to(jnp.asarray(cache["pos"], jnp.int32),
+                           (tokens.shape[0],))
+    src_len = cache.get("src_len")
     x = jnp.take(params["embed"]["tok"], tokens, axis=0)
 
     def body(x, xs):
@@ -195,7 +218,8 @@ def decode_step(params: dict, cfg: ModelConfig, tokens, cache: dict, *,
                                              v_c, pos)
         x = x + h
         h = norms.apply(p_l["ln2"], x, cfg.norm_eps)
-        x = x + _cross_attend(p_l["cross_attn"], cfg, h, (ck, cv))
+        x = x + _cross_attend(p_l["cross_attn"], cfg, h, (ck, cv),
+                              src_len=src_len)
         h = norms.apply(p_l["ln3"], x, cfg.norm_eps)
         x = x + mlp.apply(p_l["mlp"], cfg, h)
         return x, (k_c, v_c)

@@ -108,11 +108,16 @@ def apply_prefill(params, cfg: ModelConfig, x, *, prefix_len: int = 0,
 
 def apply_decode(params, cfg: ModelConfig, x, k_cache, v_cache, pos):
     """One-token decode. x: [B, 1, D]; caches [B, Smax, KVH, Dh]; pos: scalar
-    index of the new token. Returns (out [B,1,D], new_k, new_v)."""
-    positions = jnp.full((x.shape[0], 1), pos, dtype=jnp.int32)
+    or per-row [B] vector index of the new token (per-slot positions for
+    continuous batching). Returns (out [B,1,D], new_k, new_v)."""
+    b = x.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    positions = pos[:, None]
     q, k, v = _project_qkv(params, cfg, x, positions)
-    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), pos, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), pos, axis=1)
+    # batched scatter: row i writes at its own pos[i]; out-of-bounds writes
+    # (finished slots stepped past max_len) are dropped
+    k_cache = k_cache.at[jnp.arange(b), pos].set(k[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[jnp.arange(b), pos].set(v[:, 0].astype(v_cache.dtype))
     out = core.decode_attention(q, k_cache, v_cache, pos + 1,
                                 hmap=_hmap(cfg),
                                 softcap=cfg.attn_logit_softcap)

@@ -104,10 +104,13 @@ def chunked_attention(q, k, v, *, hmap=None, chunk_q=512, causal=True,
 
 
 def decode_attention(q, k_cache, v_cache, cache_len, *, hmap=None, softcap=0.0):
-    """q: [B, 1, H, Dh]; caches [B, Smax, KVH, D*]; cache_len: scalar int —
-    number of valid cache slots (the new token's k/v already written)."""
+    """q: [B, 1, H, Dh]; caches [B, Smax, KVH, D*]; cache_len: scalar int or
+    per-row [B] vector — number of valid cache slots per row (the new
+    token's k/v already written)."""
     sk = k_cache.shape[1]
-    valid = jnp.arange(sk)[None, :] < cache_len
+    cl = jnp.asarray(cache_len)
+    cl = cl[:, None] if cl.ndim else cl
+    valid = jnp.arange(sk)[None, :] < cl
     valid = jnp.broadcast_to(valid, (q.shape[0], sk))
     return full_attention(q, k_cache, v_cache, hmap=hmap, causal=False,
                           kv_len_mask=valid, softcap=softcap)

@@ -104,13 +104,14 @@ def apply_decode(params, cfg: ModelConfig, x, ckv_cache, kpe_cache, pos):
     b = x.shape[0]
     qr, kvr, nd, rd, vd = dims(cfg)
     h = cfg.num_heads
-    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    positions = pos[:, None]
     q_nope, q_pe = _q_proj(params, cfg, x, positions)          # [B,1,H,nd],[B,1,H,rd]
     c_new, kpe_new = _kv_latent(params, cfg, x, positions)     # [B,1,kvr],[B,1,1,rd]
-    ckv_cache = jax.lax.dynamic_update_slice_in_dim(
-        ckv_cache, c_new.astype(ckv_cache.dtype), pos, axis=1)
-    kpe_cache = jax.lax.dynamic_update_slice_in_dim(
-        kpe_cache, kpe_new[:, :, 0, :].astype(kpe_cache.dtype), pos, axis=1)
+    rows = jnp.arange(b)
+    ckv_cache = ckv_cache.at[rows, pos].set(c_new[:, 0].astype(ckv_cache.dtype))
+    kpe_cache = kpe_cache.at[rows, pos].set(
+        kpe_new[:, 0, 0, :].astype(kpe_cache.dtype))
     # absorb: q_lat [B,1,H,kvr]
     q_lat = jnp.einsum("bshn,chn->bshc", q_nope, params["wk_b"])
     smax = ckv_cache.shape[1]
@@ -119,7 +120,7 @@ def apply_decode(params, cfg: ModelConfig, x, ckv_cache, kpe_cache, pos):
                          ckv_cache.astype(jnp.float32))
               + jnp.einsum("bshr,btr->bhst", q_pe.astype(jnp.float32),
                            kpe_cache.astype(jnp.float32))) * scale
-    valid = (jnp.arange(smax) <= pos)[None, None, None, :]
+    valid = (jnp.arange(smax)[None, :] <= pos[:, None])[:, None, None, :]
     scores = jnp.where(valid, scores, core.NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)                    # [B,H,1,Smax]
     o_lat = jnp.einsum("bhst,btc->bshc", probs, ckv_cache.astype(jnp.float32))

@@ -271,8 +271,12 @@ def _attn_layer_count(cfg: ModelConfig) -> int:
 
 
 def init_cache(cfg: ModelConfig, batch_size: int, max_len: int) -> dict:
+    """Slot-based cache: every leaf has a batch/slot axis (axis 1 for the
+    stacked per-layer leaves, axis 0 for ``pos``). ``pos`` is a PER-SLOT
+    [B] i32 vector — the number of tokens written per slot — so slots at
+    mixed decode progress can coexist (continuous batching)."""
     dt = jnp.dtype(cfg.dtype)
-    cache: dict = {"pos": jnp.zeros((), jnp.int32)}
+    cache: dict = {"pos": jnp.zeros((batch_size,), jnp.int32)}
     b = batch_size
     if cfg.family in ("dense", "vlm", "moe"):
         n = _attn_layer_count(cfg)
@@ -354,8 +358,27 @@ def prefill(params: dict, cfg: ModelConfig, batch: dict, max_len: int, *,
 
     x = norms.apply(params["final_norm"], x, cfg.norm_eps)
     logits = _logits(params, cfg, x[:, -1:, :])[:, 0]
-    cache["pos"] = jnp.asarray(seq, jnp.int32)
+    cache["pos"] = jnp.full((b,), seq, jnp.int32)
     return logits, cache
+
+
+def insert_slots(cache: dict, src: dict, slots) -> dict:
+    """Write the rows of ``src`` (a cache of batch size n, e.g. from a fresh
+    prefill) into ``cache`` at slot indices ``slots`` ([n] i32). Every cache
+    leaf carries the slot axis at position 1 (stacked [L, B, ...]) except
+    the per-slot scalars ``pos``/``src_len`` ([B]). Out-of-range slot
+    indices are dropped (JAX scatter semantics), which admission code uses
+    to pad groups to a fixed batch."""
+    slots = jnp.asarray(slots, jnp.int32)
+    out = {}
+    for key, val in cache.items():
+        if key in ("pos", "src_len"):
+            out[key] = val.at[slots].set(src[key].astype(val.dtype))
+        else:
+            out[key] = jax.tree.map(
+                lambda c, s: c.at[:, slots].set(s.astype(c.dtype)),
+                val, src[key])
+    return out
 
 
 def _hybrid_prefill(params, cfg, x, cache, max_len):
@@ -399,8 +422,11 @@ def _hybrid_prefill(params, cfg, x, cache, max_len):
 
 def decode_step(params: dict, cfg: ModelConfig, tokens, cache: dict, *,
                 mesh=None, batch_axes=("data",)):
-    """tokens [B, 1] -> (logits [B, V], new cache)."""
-    pos = cache["pos"]
+    """tokens [B, 1] -> (logits [B, V], new cache). ``cache["pos"]`` may be
+    a scalar (legacy caches) or a per-slot [B] vector; each row attends over
+    and writes at its own position."""
+    pos = jnp.broadcast_to(jnp.asarray(cache["pos"], jnp.int32),
+                           (tokens.shape[0],))
     x = _embed_tokens(params, cfg, tokens)
 
     if cfg.family in ("dense", "vlm"):

@@ -1,0 +1,7 @@
+"""Serving subsystem: continuous-batching engine + request scheduler."""
+from repro.serve.engine import (ServeEngine, fn_cache_info, generate,
+                                generate_legacy)
+from repro.serve.scheduler import FCFSScheduler, Request
+
+__all__ = ["ServeEngine", "FCFSScheduler", "Request", "generate",
+           "generate_legacy", "fn_cache_info"]

@@ -1,57 +1,430 @@
-"""Batched serving: prefill + greedy/temperature decode loop.
+"""Continuous-batching serve engine with a slot-based KV cache.
+
+``ServeEngine`` compiles prefill/decode ONCE per (cfg, max_len, num_slots)
+— the jitted closures live in a module-level cache keyed on the static
+configuration, so fresh engine instances (and the legacy ``generate`` path)
+never pay compile time twice. The engine owns a persistent slot-based KV
+cache with per-slot position/finished state: requests with different prompt
+lengths are admitted into free slots as others finish (continuous
+batching), EOS terminates a slot on-device, and decode runs as a jitted
+fixed-chunk ``lax.scan`` with a single host sync per chunk instead of per
+token.
 
 Used by the examples, the synthetic-math evaluator (the GSM8K-protocol
-proxy: zero-shot greedy decoding, temperature 0), and the serve dry-run.
+proxy: zero-shot greedy decoding, temperature 0), the serve launcher, and
+``benchmarks/bench_serve.py``. The pre-engine static-batch loop is kept as
+``generate_legacy`` (the parity oracle); ``generate`` keeps its original
+signature and reproduces the legacy outputs exactly.
 """
 from __future__ import annotations
 
-from functools import partial
+import numpy as np
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import registry
+from repro.serve.scheduler import FCFSScheduler, Request
+
+# ------------------------------------------------------ compiled-fn caching
+#
+# jax.jit caches on function identity: rebuilding a closure per call (the
+# pre-engine behavior) recompiles every time. All jitted serving closures
+# are built once per static key and reused process-wide.
+
+_FN_CACHE: dict = {}
+_FN_STATS = {"hits": 0, "misses": 0}
+
+
+def _cached_fn(key, build):
+    fn = _FN_CACHE.get(key)
+    if fn is None:
+        fn = _FN_CACHE[key] = build()
+        _FN_STATS["misses"] += 1
+    else:
+        _FN_STATS["hits"] += 1
+    return fn
+
+
+def fn_cache_info() -> dict:
+    """{hits, misses, size} of the process-wide compiled-fn cache. A stable
+    ``misses`` count across calls means nothing was rebuilt (and therefore
+    nothing recompiled)."""
+    return dict(_FN_STATS, size=len(_FN_CACHE))
+
+
+def clear_fn_cache() -> None:
+    _FN_CACHE.clear()
+    _FN_STATS.update(hits=0, misses=0)
 
 
 def make_decode_fn(cfg: ModelConfig, *, mesh=None, batch_axes=("data",)):
-    model = registry.get(cfg)
+    key = ("decode", cfg, mesh, tuple(batch_axes))
 
-    @jax.jit
-    def decode_fn(params, tokens, cache):
-        return model.decode_step(params, cfg, tokens, cache, mesh=mesh,
-                                 batch_axes=batch_axes)
+    def build():
+        model = registry.get(cfg)
 
-    return decode_fn
+        @jax.jit
+        def decode_fn(params, tokens, cache):
+            return model.decode_step(params, cfg, tokens, cache, mesh=mesh,
+                                     batch_axes=batch_axes)
+
+        return decode_fn
+
+    return _cached_fn(key, build)
 
 
 def make_prefill_fn(cfg: ModelConfig, max_len: int, *, mesh=None,
                     batch_axes=("data",)):
-    model = registry.get(cfg)
+    key = ("prefill", cfg, max_len, mesh, tuple(batch_axes))
 
-    @partial(jax.jit, static_argnames=())
-    def prefill_fn(params, batch):
-        return model.prefill(params, cfg, batch, max_len, mesh=mesh,
-                             batch_axes=batch_axes)
+    def build():
+        model = registry.get(cfg)
 
-    return prefill_fn
+        @jax.jit
+        def prefill_fn(params, batch):
+            return model.prefill(params, cfg, batch, max_len, mesh=mesh,
+                                 batch_axes=batch_axes)
+
+        return prefill_fn
+
+    return _cached_fn(key, build)
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _prompt_prefix(cfg: ModelConfig, batch: dict) -> int:
+    """Non-token cache positions a prompt occupies (vlm patch prefix).
+    Batch-derived, not cfg-derived: a vlm batch without patch_embeds
+    prefills with prefix 0 (see lm.prefill)."""
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        return int(batch["patch_embeds"].shape[1])
+    return 0
+
+
+def _sample(logits, temperature: float, keys):
+    """Greedy (paper eval protocol) or per-slot temperature sampling — each
+    slot consumes its own key stream so the admission order of OTHER slots
+    never perturbs a request's tokens."""
+    if temperature > 0:
+        return jax.vmap(lambda k, lg: jax.random.categorical(
+            k, lg.astype(jnp.float32) / temperature))(
+                keys, logits).astype(jnp.int32)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------- engine
+
+
+class ServeEngine:
+    """Slot-based continuous-batching engine.
+
+    The KV cache has ``num_slots`` rows; each slot holds at most one
+    in-flight request with its own position (``cache["pos"]`` [B]) and
+    on-device finished flag. Admission batches same-shape pending requests
+    (FCFS), prefills them in one call, and scatters the new rows into free
+    slots (``insert_slots``); group sizes are padded up to a power of two
+    with the pad rows scattered to the out-of-range slot index (dropped),
+    bounding prefill compile keys to log2(num_slots) per prompt shape.
+
+    ``submit`` then ``step`` drive it incrementally; ``run`` drains a whole
+    request list. Arrivals are measured in engine steps (one ``step`` = one
+    admission pass + one decode chunk).
+
+    Caveat: with ``moe_impl="ep"`` on a mesh, expert capacity buckets depend
+    on the batch's token count, so (as with any capacity-routed MoE under
+    rebatching) a request's tokens can depend on what shares its decode
+    batch; admission groups are never pow2-padded for ep configs.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, max_len: int,
+                 num_slots: int, eos_id: int | None = None, pad_id: int = 0,
+                 decode_chunk: int = 8, temperature: float = 0.0,
+                 rng: jax.Array | None = None, mesh=None,
+                 batch_axes=("data",)):
+        if num_slots < 1:
+            raise ValueError("num_slots must be >= 1")
+        self.cfg, self.params = cfg, params
+        self.model = registry.get(cfg)
+        self.max_len, self.num_slots = int(max_len), int(num_slots)
+        self.eos_id = None if eos_id is None else int(eos_id)
+        self.pad_id = int(pad_id)
+        self.decode_chunk = int(decode_chunk)
+        self.temperature = float(temperature)
+        self.mesh, self.batch_axes = mesh, tuple(batch_axes)
+        self.scheduler = FCFSScheduler()
+
+        self.cache = self.model.init_cache(cfg, self.num_slots, self.max_len)
+        self.finished = jnp.ones((self.num_slots,), bool)  # idle slots are inert
+        self.last_tok = jnp.full((self.num_slots,), self.pad_id, jnp.int32)
+        base = rng if rng is not None else jax.random.PRNGKey(0)
+        self._base_rng = base
+        self.keys = jax.random.split(base, self.num_slots)
+
+        self._slot_req: list[Request | None] = [None] * self.num_slots
+        self._out: dict[int, list[int]] = {}      # uid -> emitted tokens
+        self._left: dict[int, int] = {}           # uid -> remaining budget
+        self.clock = 0                            # admission step counter
+        self.stats = {"decode_chunks": 0, "decode_steps": 0, "prefills": 0,
+                      "admitted": 0, "completed": 0}
+
+    # ---------------------------------------------------- compiled closures
+
+    def _static_key(self) -> tuple:
+        return (self.cfg, self.max_len, self.num_slots, self.eos_id,
+                self.pad_id, self.temperature, self.mesh, self.batch_axes)
+
+    def _chunk_fn(self):
+        # the build closure must capture only statics (no `self`): the jitted
+        # fn lives in the process-wide cache and would otherwise pin the
+        # first engine instance's params + KV cache for the process lifetime
+        key = ("chunk", self.decode_chunk) + self._static_key()
+        model, cfg = self.model, self.cfg
+        mesh, axes = self.mesh, self.batch_axes
+        eos, pad, steps = self.eos_id, self.pad_id, self.decode_chunk
+        temperature = self.temperature
+
+        def build():
+            @jax.jit
+            def chunk_fn(params, cache, last_tok, finished, keys):
+                def body(carry, _):
+                    cache, tok, fin, keys = carry
+                    logits, cache = model.decode_step(
+                        params, cfg, tok[:, None], cache, mesh=mesh,
+                        batch_axes=axes)
+                    ks = jax.vmap(jax.random.split)(keys)
+                    nxt = _sample(logits, temperature, ks[:, 1])
+                    keys = ks[:, 0] if temperature > 0 else keys
+                    nxt = jnp.where(fin, pad, nxt)
+                    if eos is not None:
+                        fin = fin | (nxt == eos)
+                    return (cache, nxt, fin, keys), nxt
+
+                carry = (cache, last_tok, finished, keys)
+                (cache, tok, fin, keys), toks = jax.lax.scan(
+                    body, carry, None, length=steps)
+                return cache, tok, fin, keys, toks.T  # toks: [B, steps]
+
+            return chunk_fn
+
+        return _cached_fn(key, build)
+
+    def _admit_fn(self, group_size: int, sig: tuple):
+        key = ("admit", group_size, sig) + self._static_key()
+        model, cfg, max_len = self.model, self.cfg, self.max_len
+        mesh, axes, eos = self.mesh, self.batch_axes, self.eos_id
+        temperature = self.temperature
+
+        def build():
+            @jax.jit
+            def admit_fn(params, cache, batch, slots, last_tok, finished,
+                         keys, req_keys):
+                logits, new_cache = model.prefill(params, cfg, batch, max_len,
+                                                  mesh=mesh, batch_axes=axes)
+                cache = model.insert_slots(cache, new_cache, slots)
+                ks = jax.vmap(jax.random.split)(req_keys)
+                tok0 = _sample(logits, temperature, ks[:, 1])
+                fin0 = ((tok0 == eos) if eos is not None
+                        else jnp.zeros(tok0.shape, bool))
+                last_tok = last_tok.at[slots].set(tok0)
+                finished = finished.at[slots].set(fin0)
+                keys = keys.at[slots].set(ks[:, 0])
+                return cache, last_tok, finished, keys, tok0
+
+            return admit_fn
+
+        return _cached_fn(key, build)
+
+    # ----------------------------------------------------------- lifecycle
+
+    def submit(self, req: Request) -> None:
+        prefix = 0
+        if self.cfg.family == "vlm" and "patch_embeds" in req.extras:
+            prefix = int(np.asarray(req.extras["patch_embeds"]).shape[0])
+        need = prefix + req.prompt_len + req.max_new_tokens
+        if need > self.max_len:
+            raise ValueError(
+                f"request {req.uid} needs {need} cache positions "
+                f"(prefix {prefix} + prompt {req.prompt_len} + "
+                f"{req.max_new_tokens} new) but max_len={self.max_len}")
+        self.scheduler.submit(req)
+
+    def _free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self._slot_req) if r is None]
+
+    @property
+    def num_active(self) -> int:
+        return sum(r is not None for r in self._slot_req)
+
+    def _complete(self, slot: int, completed: list) -> None:
+        req = self._slot_req[slot]
+        self._slot_req[slot] = None
+        self.stats["completed"] += 1
+        completed.append((req.uid, np.asarray(self._out.pop(req.uid),
+                                              np.int32)))
+        self._left.pop(req.uid, None)
+
+    def _admit(self, group: list[Request], completed: list) -> None:
+        free = self._free_slots()
+        g = len(group)
+        assert g <= len(free)
+        slot_ids = free[:g]
+        # pad the group to a power of two: duplicate rows, scattered to the
+        # out-of-range slot index so insert_slots drops them — one prefill
+        # compile per (pow2 size, prompt signature). EP MoE is exempt: its
+        # capacity buckets depend on the batch's token count, so pad rows
+        # would perturb the real rows' routing
+        gp = g if self.cfg.moe_impl == "ep" else _next_pow2(g)
+        tokens = np.stack([r.tokens for r in group]).astype(np.int32)
+        extras = {k: np.stack([np.asarray(r.extras[k]) for r in group])
+                  for k in group[0].extras}
+        if gp > g:
+            rep = [(0, gp - g)] + [(0, 0)] * (tokens.ndim - 1)
+            tokens = np.pad(tokens, rep, mode="edge")
+            extras = {k: np.pad(v, [(0, gp - g)] + [(0, 0)] * (v.ndim - 1),
+                                mode="edge") for k, v in extras.items()}
+        slots = np.asarray(slot_ids + [self.num_slots] * (gp - g), np.int32)
+        batch = {"tokens": tokens, **extras}
+        if self.temperature > 0:
+            req_keys = jnp.stack(
+                [jax.random.fold_in(self._base_rng, r.uid) for r in group]
+                + [self._base_rng] * (gp - g))
+        else:
+            req_keys = jnp.zeros((gp,) + self.keys.shape[1:], self.keys.dtype)
+
+        fn = self._admit_fn(gp, group[0].signature())
+        self.cache, self.last_tok, self.finished, self.keys, tok0 = fn(
+            self.params, self.cache, batch, slots, self.last_tok,
+            self.finished, self.keys, req_keys)
+        self.stats["prefills"] += 1
+        self.stats["admitted"] += g
+
+        tok0 = np.asarray(tok0)[:g]
+        for req, slot, t in zip(group, slot_ids, tok0):
+            self._slot_req[slot] = req
+            self._out[req.uid] = [int(t)]
+            self._left[req.uid] = req.max_new_tokens - 1
+            if ((self.eos_id is not None and int(t) == self.eos_id)
+                    or self._left[req.uid] == 0):
+                self._complete(slot, completed)
+
+    def step(self) -> list[tuple[int, np.ndarray]]:
+        """One engine step: admit every runnable same-shape group into free
+        slots, then run one jitted decode chunk (a single host sync).
+        Returns (uid, tokens) for requests completed this step."""
+        completed: list[tuple[int, np.ndarray]] = []
+        while True:
+            group = self.scheduler.next_group(len(self._free_slots()),
+                                              now=self.clock)
+            if not group:
+                break
+            self._admit(group, completed)
+
+        if self.num_active:
+            fn = self._chunk_fn()
+            self.cache, self.last_tok, self.finished, self.keys, toks = fn(
+                self.params, self.cache, self.last_tok, self.finished,
+                self.keys)
+            self.stats["decode_chunks"] += 1
+            self.stats["decode_steps"] += self.decode_chunk
+            toks = np.asarray(toks)  # [num_slots, chunk] — the host sync
+            for slot in range(self.num_slots):
+                req = self._slot_req[slot]
+                if req is None:
+                    continue
+                for t in toks[slot]:
+                    self._out[req.uid].append(int(t))
+                    self._left[req.uid] -= 1
+                    if ((self.eos_id is not None and int(t) == self.eos_id)
+                            or self._left[req.uid] == 0):
+                        self._complete(slot, completed)
+                        break
+        self.clock += 1
+        return completed
+
+    def run(self, requests=()) -> dict[int, np.ndarray]:
+        """Submit ``requests`` and drive steps until queue and slots drain.
+        Returns {uid: generated tokens (ends at EOS if hit)}."""
+        for r in requests:
+            self.submit(r)
+        results: dict[int, np.ndarray] = {}
+        while self.scheduler.pending or self.num_active:
+            for uid, toks in self.step():
+                results[uid] = toks
+        return results
+
+    def generate(self, batch: dict, *, max_new_tokens: int) -> np.ndarray:
+        """Static-batch convenience: decode ``batch`` (all prompts the same
+        length, batch size <= num_slots) and return [B, max_new_tokens] with
+        ``pad_id`` after EOS — the legacy ``generate`` output contract."""
+        b = batch["tokens"].shape[0]
+        if b > self.num_slots:
+            raise ValueError(f"batch {b} > num_slots {self.num_slots}")
+        reqs = [Request(uid=i, tokens=np.asarray(batch["tokens"][i]),
+                        max_new_tokens=max_new_tokens,
+                        extras={k: np.asarray(batch[k][i]) for k in batch
+                                if k != "tokens"})
+                for i in range(b)]
+        res = self.run(reqs)
+        out = np.full((b, max_new_tokens), self.pad_id, np.int32)
+        for i in range(b):
+            toks = res[i][:max_new_tokens]
+            out[i, :len(toks)] = toks
+        return out
+
+
+# ------------------------------------------------------------- public API
 
 
 def generate(params, cfg: ModelConfig, batch: dict, *, max_new_tokens: int,
              max_len: int | None = None, temperature: float = 0.0,
              rng: jax.Array | None = None, mesh=None, batch_axes=("data",),
-             eos_id: int | None = None):
+             eos_id: int | None = None, num_slots: int | None = None,
+             decode_chunk: int = 8):
     """Greedy (temperature=0, the paper's eval protocol) or sampled decoding.
-    batch["tokens"]: [B, S_prompt]. Returns np.ndarray [B, max_new_tokens]."""
+    batch["tokens"]: [B, S_prompt]. Returns np.ndarray [B, max_new_tokens].
+
+    Compat wrapper over ``ServeEngine`` — token-for-token identical to the
+    pre-engine loop (``generate_legacy``). Sampled decoding keeps the legacy
+    path so the historical rng stream (one batch-wide categorical per step)
+    is preserved exactly."""
+    if temperature > 0:
+        return generate_legacy(params, cfg, batch,
+                               max_new_tokens=max_new_tokens, max_len=max_len,
+                               temperature=temperature, rng=rng, mesh=mesh,
+                               batch_axes=batch_axes, eos_id=eos_id)
     b, s = batch["tokens"].shape
-    max_len = max_len or (s + max_new_tokens)
+    max_len = max_len or (s + _prompt_prefix(cfg, batch) + max_new_tokens)
+    engine = ServeEngine(cfg, params, max_len=max_len,
+                         num_slots=num_slots or b, eos_id=eos_id,
+                         decode_chunk=decode_chunk, mesh=mesh,
+                         batch_axes=batch_axes)
+    return engine.generate(batch, max_new_tokens=max_new_tokens)
+
+
+def generate_legacy(params, cfg: ModelConfig, batch: dict, *,
+                    max_new_tokens: int, max_len: int | None = None,
+                    temperature: float = 0.0, rng: jax.Array | None = None,
+                    mesh=None, batch_axes=("data",), eos_id: int | None = None):
+    """The pre-engine static-batch loop: batched prefill + one decode_step
+    (and one host sync) per token, full max_new_tokens always decoded, EOS
+    masked post-hoc. Kept as the engine's parity oracle and as the sampled-
+    decoding path; its prefill/decode closures now come from the process-
+    wide cache instead of recompiling per call."""
+    b, s = batch["tokens"].shape
+    max_len = max_len or (s + _prompt_prefix(cfg, batch) + max_new_tokens)
     prefill_fn = make_prefill_fn(cfg, max_len, mesh=mesh, batch_axes=batch_axes)
     decode_fn = make_decode_fn(cfg, mesh=mesh, batch_axes=batch_axes)
     logits, cache = prefill_fn(params, batch)
     out = []
     tok = None
-    for i in range(max_new_tokens):
+    for _ in range(max_new_tokens):
         if temperature > 0:
             rng, k = jax.random.split(rng)
             tok = jax.random.categorical(k, logits.astype(jnp.float32) / temperature)

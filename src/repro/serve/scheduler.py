@@ -1,0 +1,85 @@
+"""Request queue + slot admission policy for the continuous-batching engine.
+
+FCFS with same-shape grouping: ``next_group`` hands the engine the longest
+run of *consecutive* head-of-queue requests that share a prompt signature
+(prompt length + extra-input shapes) and have arrived by ``now``, capped by
+the number of free slots. Grouping consecutive same-shape requests keeps
+admission FCFS while letting the engine prefill them as one batch (one
+prefill compile key per signature instead of per request).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    """One generation request.
+
+    ``tokens``: the prompt, [S] i32 (no batch dim). ``extras`` carries
+    per-request model inputs without a batch dim (e.g. vlm ``patch_embeds``
+    [Np, D] or encdec ``src_embeds`` [Ss, D]). ``arrival`` is the engine
+    step at which the request becomes admissible (0 = immediately); the
+    benchmark's staggered workload replays a trace through it.
+    """
+
+    uid: int
+    tokens: np.ndarray
+    max_new_tokens: int
+    arrival: float = 0.0
+    extras: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        self.tokens = np.asarray(self.tokens, np.int32)
+        if self.tokens.ndim != 1 or self.tokens.shape[0] < 1:
+            raise ValueError(f"request {self.uid}: tokens must be non-empty "
+                             f"[S], got {self.tokens.shape}")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"request {self.uid}: max_new_tokens must be >= 1")
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.tokens.shape[0])
+
+    def signature(self) -> tuple:
+        """Requests with equal signatures can share one prefill call."""
+        ex = tuple(sorted((k, np.asarray(v).shape) for k, v in self.extras.items()))
+        return (self.prompt_len, ex)
+
+
+class FCFSScheduler:
+    """First-come-first-served queue with consecutive same-shape grouping."""
+
+    def __init__(self):
+        self._q: deque[Request] = deque()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    @property
+    def pending(self) -> int:
+        return len(self._q)
+
+    def submit(self, req: Request) -> None:
+        self._q.append(req)
+
+    def next_arrival(self) -> float | None:
+        """Arrival step of the head request (None if the queue is empty)."""
+        return self._q[0].arrival if self._q else None
+
+    def next_group(self, free_slots: int, now: float = float("inf")) -> list[Request]:
+        """Pop up to ``free_slots`` consecutive head-of-queue requests that
+        share the head's signature and have ``arrival <= now``."""
+        if free_slots <= 0 or not self._q or self._q[0].arrival > now:
+            return []
+        sig = self._q[0].signature()
+        group: list[Request] = []
+        while self._q and len(group) < free_slots:
+            r = self._q[0]
+            if r.arrival > now or r.signature() != sig:
+                break
+            group.append(self._q.popleft())
+        return group

@@ -107,6 +107,31 @@ class TestDecodeAttention:
         np.testing.assert_allclose(np.asarray(o.reshape(b, h, d), np.float32),
                                    np.asarray(expect, np.float32), **_tol(dtype))
 
+    @pytest.mark.parametrize("s,valids", [(512, (1, 100, 512)),
+                                          (1024, (7, 1024, 333))])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_vector_valid_len(self, s, valids, dtype):
+        """Per-row valid_len (continuous-batching slots at mixed progress)
+        must match the oracle row for row."""
+        b, h, d = len(valids), 4, 64
+        ks = jax.random.split(jax.random.PRNGKey(5), 3)
+        q = (jax.random.normal(ks[0], (b, 1, h, d))).astype(dtype)
+        k = (0.5 * jax.random.normal(ks[1], (b, s, h, d))).astype(dtype)
+        v = (0.5 * jax.random.normal(ks[2], (b, s, h, d))).astype(dtype)
+        vl = jnp.asarray(valids, jnp.int32)
+        o = ops.decode_attention(q, k, v, vl)
+        fold = lambda t: t.transpose(0, 2, 1, 3)  # noqa: E731
+        expect = ref.decode_attention(q.reshape(b, h, d), fold(k), fold(v), vl)
+        np.testing.assert_allclose(np.asarray(o.reshape(b, h, d), np.float32),
+                                   np.asarray(expect, np.float32), **_tol(dtype))
+        # each row must equal the scalar-valid_len result for its own length
+        for i, v_i in enumerate(valids):
+            solo = ops.decode_attention(q[i:i + 1], k[i:i + 1], v[i:i + 1],
+                                        v_i)
+            np.testing.assert_allclose(np.asarray(o[i], np.float32),
+                                       np.asarray(solo[0], np.float32),
+                                       rtol=1e-6, atol=1e-6)
+
 
 class TestRMSNorm:
     @pytest.mark.parametrize("shape", [(8, 128), (2, 16, 256), (3, 512)])
