@@ -1,0 +1,139 @@
+"""Resident optimizer-state memory + banked-swap overhead (paper §3.3).
+
+The paper's headline efficiency claim is that only *selected* blocks' AdamW
+moments occupy accelerator memory. This bench measures it on the actual
+TrainState rather than the deterministic model: full fine-tuning vs dense
+AdaGradSelect (full moments, the trajectory oracle) vs banked AdaGradSelect
+(compact [k]-slot device banks + host-resident full store) vs LoRA.
+
+Columns per method: measured device-resident bytes / host-resident bytes
+(``core.offload.resident_opt_bytes`` over ``state["opt"]``), the §3.3 model
+``2 * P_sel * B``, and steady-state step time — the banked row's step-time
+delta vs the dense row is the host<->device moment-streaming overhead the
+paper accepts for the memory win.
+
+Run directly (``python -m benchmarks.bench_memory [--json out.json]
+[--smoke]``) or through ``benchmarks/run.py`` (``--json`` there embeds this
+table for trajectory tracking).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import BENCH_MODEL, GLOBAL_BATCH, SEQ_LEN
+from repro.configs.base import OptimizerConfig, SelectConfig, TrainConfig
+from repro.core import offload
+from repro.train.trainer import Trainer
+
+# deeper stack than the other benches: the memory win scales with the number
+# of stacked blocks not selected (14 blocks, k=33% -> 5 resident)
+MEM_MODEL = BENCH_MODEL.replace(name="bench-mem", num_layers=12)
+K_PERCENT = 33.0
+
+ROWS = (
+    # (row name, method, moment_residency, offload)
+    ("full_ft", "full", "device", "none"),
+    ("adagradselect_dense", "adagradselect", "device", "none"),
+    ("adagradselect_banked", "adagradselect", "banked", "host"),
+    ("lora_r8", "lora", "device", "none"),
+)
+
+# last collected table (read by benchmarks/run.py --json)
+LAST_TABLE: list | None = None
+
+
+def _tcfg(method: str, residency: str, offload_policy: str,
+          steps: int) -> TrainConfig:
+    return TrainConfig(
+        model=MEM_MODEL, method=method,
+        select=SelectConfig(k_percent=K_PERCENT,
+                            steps_per_epoch=max(1, steps // 3),
+                            epsilon_decay=0.05),
+        optimizer=OptimizerConfig(lr=3e-3, schedule="constant",
+                                  warmup_steps=0, lora_rank=8,
+                                  moment_residency=residency,
+                                  offload=offload_policy,
+                                  total_steps=steps),
+        seq_len=SEQ_LEN, global_batch=GLOBAL_BATCH, steps=steps,
+        log_every=0, seed=0)
+
+
+def collect(steps: int = 30) -> list[dict]:
+    """-> one dict per method: measured residency, §3.3 model, step time."""
+    global LAST_TABLE
+    table = []
+    for name, method, residency, offload_policy in ROWS:
+        tr = Trainer(_tcfg(method, residency, offload_policy, steps))
+        log = tr.train()
+        res = offload.resident_opt_bytes(tr.state["opt"])
+        rep = tr.method.trainable_param_report(MEM_MODEL, tr.state)
+        table.append({
+            "name": name, "method": method, "residency": residency,
+            "offload": offload_policy,
+            "device_bytes": res["device"], "host_bytes": res["host"],
+            "modeled_bytes": rep.opt_bytes,
+            "step_time_us": float(np.mean(log.step_times[3:])) * 1e6,
+            "final_loss": float(log.losses[-1]),
+        })
+    full = next(r for r in table if r["name"] == "full_ft")
+    for r in table:
+        r["device_vs_full"] = r["device_bytes"] / max(1, full["device_bytes"])
+        r["step_time_vs_full"] = (r["step_time_us"]
+                                  / max(1e-9, full["step_time_us"]))
+    LAST_TABLE = table
+    return table
+
+
+def run(steps: int = 30):
+    """benchmarks/run.py rows: name, step_us, derived (memory columns)."""
+    out = []
+    for r in collect(steps):
+        out.append((f"memory/{r['name']}", r["step_time_us"],
+                    f"dev_bytes={r['device_bytes']};"
+                    f"host_bytes={r['host_bytes']};"
+                    f"dev_vs_full={r['device_vs_full']:.3f};"
+                    f"loss={r['final_loss']:.4f}"))
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int,
+                    default=int(os.environ.get("REPRO_BENCH_STEPS", "30")))
+    ap.add_argument("--smoke", action="store_true",
+                    help="few steps + assert the banked residency win")
+    ap.add_argument("--json", default=None,
+                    help="write the memory table as JSON")
+    args = ap.parse_args()
+    steps = min(args.steps, 8) if args.smoke else args.steps
+
+    table = collect(steps)
+    hdr = (f"{'method':24s} {'device MiB':>11s} {'host MiB':>9s} "
+           f"{'model MiB':>10s} {'vs full':>8s} {'step us':>9s}")
+    print(hdr)
+    mib = 1 << 20
+    for r in table:
+        print(f"{r['name']:24s} {r['device_bytes']/mib:11.2f} "
+              f"{r['host_bytes']/mib:9.2f} {r['modeled_bytes']/mib:10.2f} "
+              f"{r['device_vs_full']:8.3f} {r['step_time_us']:9.1f}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"model": MEM_MODEL.name, "k_percent": K_PERCENT,
+                       "steps": steps, "rows": table}, f, indent=2)
+        print(f"wrote {args.json}")
+    if args.smoke:
+        banked = next(r for r in table if r["residency"] == "banked")
+        assert banked["device_vs_full"] <= 0.5, (
+            f"banked device-resident bytes {banked['device_vs_full']:.3f} "
+            f"of full-FT — expected <= 0.5 at k~1/3")
+        print("smoke OK: banked device-resident "
+              f"{banked['device_vs_full']:.3f} of full-FT")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -2,19 +2,29 @@
 
 Prints ``name,us_per_call,derived`` CSV. Set REPRO_BENCH_STEPS to shrink the
 training benches (CI); roofline rows appear when results/dryrun_*.json exist
-(produced by repro.launch.dryrun).
+(produced by repro.launch.dryrun). ``--json PATH`` additionally emits the
+rows plus the optimizer-memory table (bench_memory) as JSON for trajectory
+tracking across PRs.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import os
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="also write rows + memory table as JSON")
+    args = ap.parse_args(argv)
+
     steps = int(os.environ.get("REPRO_BENCH_STEPS", "150"))
     rows = []
 
     from benchmarks import (bench_fig1, bench_fig3, bench_fig4, bench_kernels,
-                            bench_serve, bench_table1, roofline_table)
+                            bench_memory, bench_serve, bench_table1,
+                            roofline_table)
 
     for mod, kwargs in (
         (bench_kernels, {}),
@@ -22,6 +32,7 @@ def main() -> None:
         (bench_fig1, {"steps": max(40, steps // 2)}),
         (bench_fig3, {"steps": steps}),
         (bench_fig4, {"steps": steps}),
+        (bench_memory, {"steps": max(10, steps // 5)}),
         (bench_serve, {}),
         (roofline_table, {}),
     ):
@@ -34,6 +45,15 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+    if args.json:
+        payload = {
+            "rows": [{"name": n, "us_per_call": us, "derived": d}
+                     for n, us, d in rows],
+            "memory_table": bench_memory.LAST_TABLE,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
 
 
 if __name__ == "__main__":

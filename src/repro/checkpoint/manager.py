@@ -10,10 +10,14 @@ Design (per DESIGN.md §7, sized for 1000+ node operation):
                process runs (shardings are applied at device_put time, not
                baked into the file), so a job can come back on a different
                slice size
-  * complete — the TrainState (params, AdamW moments, per-block counts,
-               AdaGradSelect freq/cum_norms/step/PRNG, data cursor) round-
-               trips bit-exactly; the bandit's learned arm statistics
-               survive preemption
+  * complete — the TrainState (params, AdamW moments — dense m/v or the
+               banked layout's device banks + slot_map + host-resident full
+               store, per-block counts, AdaGradSelect freq/cum_norms/step/
+               PRNG, data cursor) round-trips bit-exactly; the bandit's
+               learned arm statistics and the moment residency map survive
+               preemption. Host-resident numpy leaves (the banked full
+               store) are copied at snapshot time: the train step mutates
+               them in place, and the async writer needs a consistent view
   * multi-host — every process writes its own <step>/proc_<i>.npz with its
                addressable shards (single-host writes one file; the format
                is identical)
@@ -39,7 +43,14 @@ def _flatten(state) -> dict[str, np.ndarray]:
 def _unflatten_into(target, flat: dict):
     """Rebuild arrays in the structure of ``target`` from the flat dict."""
     def pick(path, leaf):
-        arr = flat[path]
+        try:
+            arr = flat[path]
+        except KeyError:
+            raise KeyError(
+                f"checkpoint has no leaf {path!r} — the saved TrainState "
+                f"predates the current state schema (e.g. checkpoints from "
+                f"before the banked-optimizer / selection-indices layout); "
+                f"restart from scratch or migrate the checkpoint") from None
         assert arr.shape == tuple(leaf.shape), (path, arr.shape, leaf.shape)
         return arr
     from repro.utils.trees import tree_map_with_path
@@ -59,7 +70,13 @@ class CheckpointManager:
     def save(self, step: int, state, extra_meta: dict | None = None):
         """Snapshot to host synchronously, serialize asynchronously."""
         self.wait()  # one in-flight save at a time
-        host_state = jax.tree.map(np.asarray, jax.device_get(state))
+        # np.array (not asarray) on host-resident leaves: the banked
+        # optimizer's full store is mutated in place by later train steps,
+        # so the async writer must serialize its own copy
+        host_state = jax.tree.map(
+            lambda x: np.array(x) if isinstance(x, np.ndarray)
+            else np.asarray(x),
+            jax.device_get(state))
         meta = {"step": int(step), "time": time.time(),
                 "process_count": jax.process_count(), **(extra_meta or {})}
 

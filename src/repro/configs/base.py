@@ -210,6 +210,15 @@ class OptimizerConfig:
     schedule: str = "cosine"       # "constant" | "cosine" | "linear"
     total_steps: int = 1000
     # paper 3.3 adaptation: where do AdamW moments live?
+    #   moment_residency "device": full m/v for every parameter stay on the
+    #     accelerator (dense masked-AdamW, the trajectory oracle); ``offload``
+    #     then shards/places those dense moments ("zero1" / "host" memory
+    #     kinds / "none").
+    #   moment_residency "banked": only selected blocks' moments are device-
+    #     resident, in compact [k]-slot banks; ``offload`` governs the full
+    #     backing store instead ("host" -> host RAM, streamed at selection
+    #     changes; "none"/"zero1" -> device-resident store).
+    moment_residency: str = "device"  # "device" | "banked"
     offload: str = "none"          # "none" | "host" | "zero1"
     moment_dtype: str = "float32"  # "float32" | "bfloat16" (halves m/v HBM)
     accum_dtype: str = "float32"   # microbatch grad-accumulation buffer

@@ -5,9 +5,14 @@ string-keyed policy registry; the baselines it is compared against
 (``topk_grad`` = Alg. 1, ``random``, ``all`` = full FT) and the beyond-paper
 policies (``lisa`` = interval-resampled random layers, ``grass`` =
 gradient-norm importance sampling) are sibling entries. Each policy declares
-its own state pytree (``extra_state``) on top of three common fields —
+its own state pytree (``extra_state``) on top of four common fields —
 
-    {"step": i32, "key": PRNGKey, "mask": bool[num_blocks]}
+    {"step": i32, "key": PRNGKey, "mask": bool[num_blocks],
+     "indices": i32[k]}
+
+``indices`` is the static-shape selected-block-id vector alongside the
+boolean mask (ascending ids, padded with ``num_blocks``) — the contract the
+banked optimizer state indexes through (see ``selected_indices``).
 
 so e.g. only ``adagradselect`` carries ``freq`` (Dirichlet posterior counts)
 and only the cumulative-signal policies carry ``cum_norms``. The whole
@@ -168,13 +173,29 @@ class GrassPolicy(SelectionPolicy):
 # ------------------------------------------------------------- controller
 
 
+def selected_indices(mask: jax.Array, k: int) -> jax.Array:
+    """Static-shape [k] i32 vector of selected block ids (ascending), padded
+    with ``num_blocks`` when fewer than k blocks are selected. This is the
+    runtime-vector contract the banked optimizer state gathers/scatters
+    through: k is static, the ids are data — selection changes never
+    recompile."""
+    n = mask.shape[0]
+    ids = jnp.where(mask, jnp.arange(n, dtype=jnp.int32), n)
+    return jnp.sort(ids)[:k]
+
+
 def init_state(num_blocks: int, seed: int = 0,
-               policy: str = "adagradselect") -> dict:
-    """Per-policy state pytree: common fields + the policy's extras."""
+               policy: str = "adagradselect", k: int | None = None) -> dict:
+    """Per-policy state pytree: common fields + the policy's extras.
+    ``k`` fixes the static length of the ``indices`` vector (the number of
+    bank slots in banked-residency mode); default: ``num_blocks``."""
+    k = num_blocks if k is None else min(k, num_blocks)
+    mask0 = jnp.ones((num_blocks,), jnp.bool_)  # step-0 default: all
     return {
         "step": jnp.zeros((), jnp.int32),
         "key": jax.random.PRNGKey(seed),
-        "mask": jnp.ones((num_blocks,), jnp.bool_),  # step-0 default: all
+        "mask": mask0,
+        "indices": selected_indices(mask0, k),
         **get_policy(policy).extra_state(num_blocks),
     }
 
@@ -205,6 +226,9 @@ def select(cfg: SelectConfig, state: dict, block_norms: jax.Array,
         "step": state["step"] + 1,
         "mask": mask,
     }
+    if "indices" in state:  # static-shape selected-id vector alongside mask
+        new_state["indices"] = selected_indices(mask,
+                                                state["indices"].shape[0])
     return mask, new_state
 
 

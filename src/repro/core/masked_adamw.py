@@ -9,13 +9,29 @@ equivalence test asserts.
 
 Moments are float32 regardless of param dtype. The fused Pallas kernel
 (kernels/masked_adamw.py) implements the same update for the TPU path.
+
+Two residency layouts share the update arithmetic (row-for-row identical,
+so the dense form stays the trajectory oracle):
+
+* **dense** — ``init_opt_state`` / ``update``: full m/v pytrees congruent
+  with params.
+* **banked** (paper §3.3) — ``init_banked_opt_state`` / ``swap_banked`` /
+  ``banked_update``: device-resident moments are compact [cap]-slot banks
+  (one per partition group) backed by a full store (host RAM under
+  ``offload == "host"``, see core/offload.py). ``swap_banked`` runs at
+  selection-change boundaries outside jit: evicted blocks' rows stream back
+  to the store, admitted blocks' rows stream in (zeros on first selection).
+  Inside the compiled step every bank index is a runtime vector of static
+  shape, so per-step selection never recompiles.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import OptimizerConfig
+from repro.core import partition as part_mod
 from repro.core.partition import BlockPartition, leaf_masks
 
 
@@ -43,6 +59,35 @@ def clip_by_global_norm(grads, max_norm: float):
                         grads), norm
 
 
+def _adamw_rows(cfg: OptimizerConfig, p, g, m, v, sel, cnt, lr,
+                pallas_ok: bool):
+    """The masked-AdamW formula on one leaf (or gathered bank rows of one
+    leaf). ``sel``/``cnt`` broadcast against ``p``. Shared by the dense and
+    banked layouts so their arithmetic is identical op for op."""
+    if pallas_ok:
+        from repro.kernels import ops as kops
+        return kops.masked_adamw(p, g, m, v, sel, cnt, lr, cfg.b1, cfg.b2,
+                                 cfg.eps, cfg.weight_decay)
+    mdt = m.dtype
+    gf = g.astype(jnp.float32)
+    m, v = m.astype(jnp.float32), v.astype(jnp.float32)
+    m2 = jnp.where(sel > 0, cfg.b1 * m + (1 - cfg.b1) * gf, m)
+    v2 = jnp.where(sel > 0, cfg.b2 * v + (1 - cfg.b2) * gf * gf, v)
+    c = jnp.maximum(cnt, 1.0)
+    mhat = m2 / (1 - cfg.b1 ** c)
+    vhat = v2 / (1 - cfg.b2 ** c)
+    pf = p.astype(jnp.float32)
+    step = lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * pf)
+    p2 = jnp.where(sel > 0, pf - step, pf)
+    return p2.astype(p.dtype), m2.astype(mdt), v2.astype(mdt)
+
+
+def _unzip3(flat):
+    is_t = lambda t: isinstance(t, tuple)  # noqa: E731
+    return tuple(jax.tree.map(lambda t, i=i: t[i], flat, is_leaf=is_t)
+                 for i in range(3))
+
+
 def update(cfg: OptimizerConfig, partition: BlockPartition, params: dict,
            grads: dict, opt_state: dict, mask, lr, use_pallas: bool = False):
     """One masked step. mask: [num_blocks]; lr: scalar (schedule applied by
@@ -51,32 +96,222 @@ def update(cfg: OptimizerConfig, partition: BlockPartition, params: dict,
     masks = leaf_masks(partition, params, mask)
     counts_b = leaf_masks(partition, params, counts)  # per-leaf broadcast
 
-    if use_pallas:
-        from repro.kernels import ops as kops
-
     def upd(p, g, m, v, sel, cnt):
-        if use_pallas and p.ndim >= 2:
-            return kops.masked_adamw(p, g, m, v, sel, cnt, lr, cfg.b1, cfg.b2,
-                                     cfg.eps, cfg.weight_decay)
-        mdt = m.dtype
-        gf = g.astype(jnp.float32)
-        m, v = m.astype(jnp.float32), v.astype(jnp.float32)
-        m2 = jnp.where(sel > 0, cfg.b1 * m + (1 - cfg.b1) * gf, m)
-        v2 = jnp.where(sel > 0, cfg.b2 * v + (1 - cfg.b2) * gf * gf, v)
-        c = jnp.maximum(cnt, 1.0)
-        mhat = m2 / (1 - cfg.b1 ** c)
-        vhat = v2 / (1 - cfg.b2 ** c)
-        pf = p.astype(jnp.float32)
-        step = lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * pf)
-        p2 = jnp.where(sel > 0, pf - step, pf)
-        return p2.astype(p.dtype), m2.astype(mdt), v2.astype(mdt)
+        # Pallas needs a per-row [L, 1, ...] mask — unstacked leaves get a
+        # scalar from leaf_masks, so they take the jnp path.
+        pallas_ok = use_pallas and p.ndim >= 2 and sel.ndim == p.ndim
+        return _adamw_rows(cfg, p, g, m, v, sel, cnt, lr, pallas_ok)
 
     flat = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"],
                         masks, counts_b)
-    new_params = jax.tree.map(lambda t: t[0], flat,
-                              is_leaf=lambda t: isinstance(t, tuple))
-    new_m = jax.tree.map(lambda t: t[1], flat,
-                         is_leaf=lambda t: isinstance(t, tuple))
-    new_v = jax.tree.map(lambda t: t[2], flat,
-                         is_leaf=lambda t: isinstance(t, tuple))
+    new_params, new_m, new_v = _unzip3(flat)
     return new_params, {"m": new_m, "v": new_v, "counts": counts}
+
+
+# ---------------------------------------------------- banked residency (§3.3)
+
+
+def bank_capacity(group, k_slots: int) -> int:
+    """Device slots a stacked group needs: selection places at most
+    ``k_slots`` blocks anywhere, and at most ``group.length`` of them here."""
+    return max(1, min(group.length, k_slots))
+
+
+def init_banked_opt_state(partition: BlockPartition, params: dict,
+                          k_slots: int, moment_dtype=jnp.float32,
+                          store_policy: str | None = "host") -> dict:
+    """Compact banked optimizer state:
+
+      banks[key]  — per partition group: ``m``/``v`` pytrees with leading
+                    axis ``cap = min(len, k_slots)`` (stacked groups) or
+                    full leaf shape (unstacked, cap 1), plus ``slots``
+                    [cap] i32 — the local block id each slot holds
+                    (``group.length`` = free).
+      slot_map    — [num_blocks] i32, block id -> slot in its group's bank
+                    (-1 = host-resident only). Host-side numpy: it drives
+                    ``swap_banked`` and never enters jit.
+      counts      — per-block bias-correction step counts (unchanged from
+                    the dense layout; tiny, always device-resident).
+      store       — full-shape backing store (core/offload.init_full_store);
+                    omitted when ``store_policy`` is None (eval_shape
+                    projections of the device-resident footprint).
+
+    Nothing is resident initially; the first ``swap_banked`` admits the
+    first selection with zero rows from the store (zero-init on first
+    selection, matching ``init_opt_state``'s zeros).
+    """
+    from repro.core import offload
+    banks = {}
+    for g in partition.groups:
+        sub = params[g.key]
+        if g.stacked:
+            cap = bank_capacity(g, k_slots)
+            zeros = lambda x: jnp.zeros((cap,) + tuple(x.shape[1:]),  # noqa: E731
+                                        moment_dtype)
+        else:
+            cap = 1
+            zeros = lambda x: jnp.zeros(x.shape, moment_dtype)  # noqa: E731
+        banks[g.key] = {
+            "m": jax.tree.map(zeros, sub),
+            "v": jax.tree.map(zeros, sub),
+            "slots": jnp.full((cap,), g.length, jnp.int32),
+        }
+    opt = {
+        "banks": banks,
+        "slot_map": np.full((partition.num_blocks,), -1, np.int32),
+        "counts": jnp.zeros((partition.num_blocks,), jnp.float32),
+    }
+    if store_policy is not None:
+        opt["store"] = offload.init_full_store(partition, params,
+                                               moment_dtype, store_policy)
+    return opt
+
+
+def swap_banked(partition: BlockPartition, banks: dict, store: dict,
+                slot_map, mask):
+    """Selection-change boundary (host side, outside jit): evicted blocks'
+    bank rows stream back to the full store, admitted blocks' rows stream in
+    (zero rows on first selection). Retained blocks keep their slots, so
+    within an interval with an unchanged mask this is a no-op. ``mask``:
+    host bool [num_blocks]. Returns (banks, slot_map, store) — host (numpy)
+    store leaves are updated in place, device leaves functionally.
+    """
+    from repro.core import offload
+    mask = np.asarray(mask).astype(bool)
+    slot_map = np.array(slot_map, np.int32)  # fresh copy per boundary
+    new_banks = dict(banks)
+    new_store = dict(store)
+    for g in partition.groups:
+        lo = slice(g.start, g.start + g.length)
+        gmask, gslots = mask[lo], slot_map[lo]
+        resident = gslots >= 0
+        ev_blocks = np.nonzero(resident & ~gmask)[0]
+        ad_blocks = np.nonzero(gmask & ~resident)[0]
+        if not len(ev_blocks) and not len(ad_blocks):
+            continue
+        bank = banks[g.key]
+        slots_vec = np.array(bank["slots"], np.int32)
+        cap = slots_vec.shape[0]
+        ev_slots = gslots[ev_blocks]
+        occupied = np.zeros((cap,), bool)
+        occupied[gslots[np.nonzero(resident & gmask)[0]]] = True
+        free = np.nonzero(~occupied)[0]
+        if len(ad_blocks) > len(free):
+            raise RuntimeError(
+                f"bank overflow in group {g.key!r}: {len(ad_blocks)} "
+                f"admissions for {len(free)} free slots (capacity {cap}); "
+                f"the selection selected more blocks than the configured "
+                f"slot capacity")
+        ad_slots = free[:len(ad_blocks)]
+
+        group_bank, group_store = {}, {}
+        for mom in ("m", "v"):
+            b_flat, b_def = jax.tree.flatten(bank[mom])
+            s_flat, s_def = jax.tree.flatten(store[g.key][mom])
+            out_b, out_s = [], []
+            for bl, sl in zip(b_flat, s_flat):
+                if g.stacked:
+                    if len(ev_blocks):
+                        rows = np.asarray(part_mod.gather_rows(bl, ev_slots))
+                        sl = offload.store_write_rows(sl, ev_blocks, rows)
+                    if len(ad_blocks):
+                        rows = offload.store_read_rows(sl, ad_blocks)
+                        bl = part_mod.scatter_rows(bl, ad_slots,
+                                                   jnp.asarray(rows))
+                else:  # the single block's moments are the whole leaf
+                    if len(ev_blocks):
+                        sl = offload.store_write_leaf(sl, np.asarray(bl))
+                    if len(ad_blocks):
+                        bl = jnp.asarray(np.asarray(sl),
+                                         dtype=np.asarray(bl).dtype)
+                out_b.append(bl)
+                out_s.append(sl)
+            group_bank[mom] = jax.tree.unflatten(b_def, out_b)
+            group_store[mom] = jax.tree.unflatten(s_def, out_s)
+
+        slots_vec[ev_slots] = g.length
+        slots_vec[ad_slots] = ad_blocks
+        slot_map[g.start + ev_blocks] = -1
+        slot_map[g.start + ad_blocks] = ad_slots
+        group_bank["slots"] = jnp.asarray(slots_vec)
+        new_banks[g.key] = group_bank
+        new_store[g.key] = group_store
+    return new_banks, slot_map, new_store
+
+
+def banked_update(cfg: OptimizerConfig, partition: BlockPartition,
+                  params: dict, grads: dict, banks: dict, counts, mask, lr,
+                  use_pallas: bool = False):
+    """One masked AdamW step on the compact banks (jit-safe; every index is
+    a runtime vector of static shape). Assumes residency == selection —
+    ``swap_banked`` ran at the last selection change, so every masked
+    block's moments sit in a bank row. The row arithmetic is
+    ``_adamw_rows``, identical to the dense ``update``; given the same
+    (grads, mask, lr) sequence the two layouts are trajectory-exact, which
+    keeps the dense implementation as the oracle. Non-resident blocks'
+    params (and their store moments) are untouched bit for bit.
+    Returns (new_params, new_banks, new_counts)."""
+    mask = jnp.asarray(mask)
+    counts = jnp.asarray(counts) + mask.astype(jnp.float32)
+    new_params, new_banks = {}, {}
+    for g in partition.groups:
+        bank = banks[g.key]
+        slots = jnp.asarray(bank["slots"])
+        if g.stacked:
+            valid = slots < g.length
+            gids = g.start + jnp.minimum(slots, g.length - 1)
+            sel = jnp.where(valid, mask[gids].astype(jnp.float32), 0.0)
+            cnt = counts[gids]
+
+            def upd(p, gr, m, v):
+                p_rows = part_mod.gather_rows(p, slots)
+                g_rows = part_mod.gather_rows(gr, slots)
+                shp = (sel.shape[0],) + (1,) * (p_rows.ndim - 1)
+                pallas_ok = use_pallas and p_rows.ndim >= 2
+                p2, m2, v2 = _adamw_rows(cfg, p_rows, g_rows, m, v,
+                                         sel.reshape(shp), cnt.reshape(shp),
+                                         lr, pallas_ok)
+                # free-slot sentinels (slots == g.length) are dropped
+                return part_mod.scatter_rows(p, slots, p2), m2, v2
+
+            flat = jax.tree.map(upd, params[g.key], grads[g.key],
+                                bank["m"], bank["v"])
+        else:
+            resident = slots[0] < g.length
+            sel = jnp.where(resident, mask[g.start].astype(jnp.float32), 0.0)
+            cnt = counts[g.start]
+
+            def upd(p, gr, m, v):
+                # scalar sel/cnt broadcast; no Pallas (kernel wants per-row
+                # vectors — same rule as the dense path's unstacked leaves)
+                return _adamw_rows(cfg, p, gr, m, v, sel, cnt, lr, False)
+
+            flat = jax.tree.map(upd, params[g.key], grads[g.key],
+                                bank["m"], bank["v"])
+        p_new, m_new, v_new = _unzip3(flat)
+        new_params[g.key] = p_new
+        new_banks[g.key] = {"m": m_new, "v": v_new, "slots": slots}
+    return new_params, new_banks, counts
+
+
+def materialize_moments(partition: BlockPartition, opt: dict):
+    """Full m/v pytrees reconstructed from banks + store (host sync; for
+    tests, checkpoint inspection and reporting — training never needs the
+    dense view). Returns (m, v) congruent with params."""
+    out = {"m": {}, "v": {}}
+    for g in partition.groups:
+        bank = opt["banks"][g.key]
+        slots = np.asarray(bank["slots"])
+        for mom in ("m", "v"):
+            def one(store_leaf, bank_leaf):
+                full = np.array(store_leaf)
+                if g.stacked:
+                    valid = np.nonzero(slots < g.length)[0]
+                    if len(valid):
+                        full[slots[valid]] = np.asarray(bank_leaf)[valid]
+                elif slots[0] == 0:
+                    full[...] = np.asarray(bank_leaf)
+                return full
+            out[mom][g.key] = jax.tree.map(one, opt["store"][g.key][mom],
+                                           bank[mom])
+    return out["m"], out["v"]

@@ -1,19 +1,33 @@
 """Optimizer-state residency policies — TPU adaptation of paper §3.3.
 
 The paper streams AdamW moments CPU<->GPU over PCIe so only selected blocks'
-states occupy accelerator memory. On TPU the idiomatic equivalents are:
+states occupy accelerator memory. Two mechanisms implement that here:
 
-  "host"  — place moments in host memory via XLA memory kinds
-            (NamedSharding(..., memory_kind="pinned_host")); XLA streams them
-            through the update. Matches the paper's design 1:1.
-  "zero1" — shard moments across the data-parallel axis (ZeRO-1). Uses ICI
-            (50 GB/s/link) instead of host DMA and divides moment memory by
-            the DP degree — our beyond-paper recommendation (the paper's
-            Limitations section worries precisely about PCIe bandwidth).
-  "none"  — moments colocated with params (baseline / full fine-tuning).
+1. **Banked residency** (``OptimizerConfig.moment_residency == "banked"``):
+   device-resident moments are compact [k]-slot banks (masked_adamw.py)
+   backed by the *full store* this module owns. The "host"/"zero1"/"none"
+   policies govern where that full store lives:
+
+     "host"  — numpy arrays in host RAM; rows stream host<->device at
+               selection-change boundaries (matches the paper 1:1, works on
+               every backend — no XLA memory kinds needed).
+     "zero1" / "none" — store stays on device (zero1 additionally sharded by
+               the caller via ``moment_shardings`` when a mesh is present).
+
+2. **Dense residency** (the default / oracle path): full f32 m/v for every
+   parameter; ``moment_shardings`` places them —
+
+     "host"  — XLA memory kinds (NamedSharding(memory_kind="pinned_host")).
+     "zero1" — shard moments across the data-parallel axis (ZeRO-1). Uses ICI
+               (50 GB/s/link) instead of host DMA and divides moment memory by
+               the DP degree — our beyond-paper recommendation (the paper's
+               Limitations section worries precisely about PCIe bandwidth).
+     "none"  — moments colocated with params (baseline / full fine-tuning).
 
 The deterministic §3.3 memory model (Mem = 2 * P_selected * B) is
-implemented in ``optimizer_memory_report`` and surfaced by the dry-run and
+implemented in ``optimizer_memory_report``; the *measured* column next to it
+(``resident_opt_bytes``, jax.eval_shape-compatible) accounts the actual
+TrainState, split device vs host. Both are surfaced by the dry-run and
 benchmarks regardless of backend support.
 """
 from __future__ import annotations
@@ -21,6 +35,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding
 
@@ -63,9 +78,86 @@ def moment_shardings(policy: str, param_specs: dict, mesh,
     return tree_map_with_path(lambda p, s: one(p, s), param_specs)
 
 
+# ----------------------------------------------------- banked full store
+
+
+def init_full_store(partition: BlockPartition, params: dict,
+                    moment_dtype=jnp.float32, policy: str = "host") -> dict:
+    """Full-shape m/v store backing the compact device banks (banked
+    residency). ``policy == "host"`` -> numpy arrays in host RAM (the
+    paper's design — moments stream host<->device at selection changes);
+    ``"device"`` -> device arrays (testing/uniformity; no memory win)."""
+    np_dtype = np.dtype(moment_dtype)
+
+    def zeros(x):
+        if policy == "host":
+            return np.zeros(x.shape, np_dtype)
+        return jnp.zeros(x.shape, moment_dtype)
+
+    return {g.key: {"m": jax.tree.map(zeros, params[g.key]),
+                    "v": jax.tree.map(zeros, params[g.key])}
+            for g in partition.groups}
+
+
+def store_write_rows(leaf, blocks, rows):
+    """Write evicted bank rows back into a stacked store leaf. Host (numpy)
+    leaves are updated in place — the store is owned by the optimizer and
+    snapshots copy (checkpoint/manager.py); device leaves functionally."""
+    if isinstance(leaf, np.ndarray):
+        leaf[blocks] = np.asarray(rows, dtype=leaf.dtype)
+        return leaf
+    return jnp.asarray(leaf).at[jnp.asarray(blocks)].set(
+        jnp.asarray(rows, dtype=leaf.dtype))
+
+
+def store_read_rows(leaf, blocks):
+    """Rows of a stacked store leaf for admission into bank slots."""
+    if isinstance(leaf, np.ndarray):
+        return leaf[blocks]
+    return jnp.asarray(leaf)[jnp.asarray(blocks)]
+
+
+def ensure_store_residency(store: dict, policy: str) -> dict:
+    """Re-place a full store on its configured side. Checkpoint restore
+    materializes every leaf as numpy, which would silently demote a
+    device-resident store to host (residency is dispatched on the leaf
+    type); the store is never mixed, so one leaf decides."""
+    leaves = jax.tree.leaves(store)
+    if not leaves:
+        return store
+    is_np = isinstance(leaves[0], np.ndarray)
+    if policy == "host":
+        return store if is_np else jax.tree.map(np.asarray, store)
+    return jax.tree.map(jnp.asarray, store) if is_np else store
+
+
+def store_write_leaf(leaf, value):
+    """Unstacked-group variant: the whole leaf is one block's moments."""
+    if isinstance(leaf, np.ndarray):
+        leaf[...] = np.asarray(value, dtype=leaf.dtype)
+        return leaf
+    return jnp.asarray(value, dtype=leaf.dtype)
+
+
+def resident_opt_bytes(opt_state) -> dict:
+    """Measured optimizer-state bytes of an actual TrainState subtree, split
+    by residency: numpy leaves live in host RAM, everything else is
+    accelerator-resident. Accepts concrete arrays or ShapeDtypeStructs
+    (eval_shape output counts as device — the dry-run's measured column)."""
+    dev = host = 0
+    for leaf in jax.tree.leaves(opt_state):
+        nbytes = int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+        if isinstance(leaf, np.ndarray):
+            host += nbytes
+        else:
+            dev += nbytes
+    return {"device": dev, "host": host}
+
+
 @dataclass(frozen=True)
 class MemoryReport:
-    """Paper §3.3 deterministic optimizer-memory model."""
+    """Paper §3.3 deterministic optimizer-memory model, plus (when an actual
+    optimizer state is supplied) the measured device/host-resident bytes."""
     p_total: int
     p_selected: int
     bytes_per_param: int
@@ -73,27 +165,40 @@ class MemoryReport:
     mem_selective: int
     mem_saved: int
     pct_reduction: float
+    mem_measured_device: int = -1   # -1 = not measured
+    mem_measured_host: int = -1
 
     def __str__(self):
         gb = 1 << 30
-        return (f"opt-state memory: full={self.mem_full/gb:.2f}GiB "
-                f"selective={self.mem_selective/gb:.2f}GiB "
-                f"saved={self.mem_saved/gb:.2f}GiB "
-                f"({self.pct_reduction:.1f}% reduction)")
+        s = (f"opt-state memory: full={self.mem_full/gb:.2f}GiB "
+             f"selective={self.mem_selective/gb:.2f}GiB "
+             f"saved={self.mem_saved/gb:.2f}GiB "
+             f"({self.pct_reduction:.1f}% reduction)")
+        if self.mem_measured_device >= 0:
+            s += (f" measured: device={self.mem_measured_device/gb:.2f}GiB "
+                  f"host={self.mem_measured_host/gb:.2f}GiB")
+        return s
 
 
 def optimizer_memory_report(partition: BlockPartition, params: dict,
                             k_percent: float,
-                            bytes_per_param: int = 4) -> MemoryReport:
+                            bytes_per_param: int = 4,
+                            opt_state=None) -> MemoryReport:
     """Mem_selective = 2 * P_selected * B with P_selected = the k% largest
-    blocks (worst case: selection favors the biggest blocks)."""
+    blocks (worst case: selection favors the biggest blocks). Pass the
+    actual ``state["opt"]`` pytree (arrays or eval_shape SDS) as
+    ``opt_state`` to fill the measured columns next to the model."""
     counts = params_per_block(partition, params)
     p_total = int(counts.sum())
     k = max(1, int(round(partition.num_blocks * k_percent / 100.0)))
     p_sel = int(np.sort(counts)[::-1][:k].sum())
     mem_full = 2 * p_total * bytes_per_param
     mem_sel = 2 * p_sel * bytes_per_param
+    measured = (resident_opt_bytes(opt_state) if opt_state is not None
+                else {"device": -1, "host": -1})
     return MemoryReport(
         p_total=p_total, p_selected=p_sel, bytes_per_param=bytes_per_param,
         mem_full=mem_full, mem_selective=mem_sel, mem_saved=mem_full - mem_sel,
-        pct_reduction=(1 - p_sel / p_total) * 100.0)
+        pct_reduction=(1 - p_sel / p_total) * 100.0,
+        mem_measured_device=measured["device"],
+        mem_measured_host=measured["host"])

@@ -148,6 +148,30 @@ def layer_masks_dict(partition: BlockPartition, mask: jax.Array) -> dict:
     return out
 
 
+# ------------------------------------------------------------------ slots
+#
+# Helpers for the compact banked optimizer state (masked_adamw.py): a
+# stacked group's moments live in a [cap, ...] bank whose row ``s`` holds
+# the moments of local block ``slots[s]`` (``slots[s] == group.length`` =
+# free slot). Both helpers keep every index a runtime vector of static
+# shape, so per-step selection changes never trigger recompilation.
+
+
+def gather_rows(leaf, slots, fill=0):
+    """Rows of a stacked leaf [L, ...] at ``slots`` [n] -> [n, ...].
+    Out-of-range entries (the ``L`` free-slot sentinel) read as ``fill``
+    rows instead of clamping onto a real block."""
+    return jnp.asarray(leaf).at[jnp.asarray(slots, dtype=jnp.int32)].get(
+        mode="fill", fill_value=fill)
+
+
+def scatter_rows(leaf, slots, rows):
+    """Write ``rows`` [n, ...] into stacked leaf [L, ...] at ``slots`` [n].
+    Out-of-range entries are dropped, so free-slot sentinels never land."""
+    return jnp.asarray(leaf).at[jnp.asarray(slots, dtype=jnp.int32)].set(
+        rows, mode="drop")
+
+
 def params_per_block(partition: BlockPartition, params: dict) -> np.ndarray:
     """Static count of parameters per block (for the §3.3 memory model)."""
     counts = np.zeros((partition.num_blocks,), np.int64)

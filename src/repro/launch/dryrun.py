@@ -72,6 +72,7 @@ def lower_cell(cfg, shape, mesh, *, opt_offload="zero1", microbatch=0,
                               donate=True)
         with mesh:
             lowered = fn.lower(state_sds, batch_sds)
+        meta_mem = _opt_memory(cfg, method, method_sel, state_sds)
     elif shape.kind == "prefill":
         p_sds, _ = specs_mod.params_sds(cfg, mesh)
         max_len = shape.seq_len
@@ -99,7 +100,36 @@ def lower_cell(cfg, shape, mesh, *, opt_offload="zero1", microbatch=0,
     t0 = time.time()
     compiled = lowered.compile()
     meta = {"compile_s": time.time() - t0}
+    if shape.kind == "train":
+        meta["opt_memory"] = meta_mem
     return lowered, compiled, meta
+
+
+def _opt_memory(cfg, method, sel_cfg, state_sds) -> dict:
+    """Optimizer-state memory for one train cell: the deterministic §3.3
+    model (2 * P_sel * B) next to the *measured* column — jax.eval_shape
+    accounting of the actual TrainState — plus the banked-residency
+    projection (compact [k]-slot device banks, core/masked_adamw)."""
+    from repro.core import masked_adamw, offload
+    from repro.core.partition import build_partition
+    from repro.utils.trees import tree_bytes
+
+    partition = build_partition(cfg)
+    rep = offload.optimizer_memory_report(
+        partition, state_sds["params"], sel_cfg.k_percent,
+        opt_state=state_sds["opt"])
+    cap = method.slot_capacity(cfg)
+    banked = jax.eval_shape(
+        lambda p: masked_adamw.init_banked_opt_state(partition, p, cap,
+                                                     store_policy=None),
+        state_sds["params"])
+    return {
+        "model_full_bytes": rep.mem_full,
+        "model_selective_bytes": rep.mem_selective,
+        "model_pct_reduction": rep.pct_reduction,
+        "measured_bytes": rep.mem_measured_device + rep.mem_measured_host,
+        "banked_resident_bytes": tree_bytes(banked),
+    }
 
 
 def run_cell(arch: str, shape_name: str, mesh_name: str, *,
@@ -160,6 +190,14 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, *,
                   f"compile={meta['compile_s']:.1f}s peak={peak_gb:.2f}GiB/dev "
                   f"compute={rf.compute_s*1e3:.2f}ms memory={rf.memory_s*1e3:.2f}ms "
                   f"collective={rf.collective_s*1e3:.2f}ms -> {rf.bottleneck}")
+            om = result.get("opt_memory")
+            if om:
+                gb = 1 << 30
+                print(f"    opt-state: model 2PB={om['model_selective_bytes']/gb:.2f}GiB "
+                      f"(full {om['model_full_bytes']/gb:.2f}GiB, "
+                      f"-{om['model_pct_reduction']:.0f}%) "
+                      f"measured={om['measured_bytes']/gb:.2f}GiB "
+                      f"banked-resident={om['banked_resident_bytes']/gb:.2f}GiB")
     except Exception as e:  # noqa: BLE001 — report failures per-cell
         result["status"] = "error"
         result["error"] = f"{type(e).__name__}: {e}"

@@ -39,6 +39,10 @@ def main():
     ap.add_argument("--global-batch", type=int, default=32)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--offload", default="none", choices=["none", "host", "zero1"])
+    ap.add_argument("--moment-residency", default="device",
+                    choices=["device", "banked"],
+                    help="banked: compact [k]-slot device moment banks over "
+                         "a full store placed per --offload (paper 3.3)")
     ap.add_argument("--mesh", default=None, choices=[None, "single", "multi"],
                     help="distributed mesh (requires real devices)")
     ap.add_argument("--checkpoint-dir", default="")
@@ -61,6 +65,7 @@ def main():
                             grass_temperature=args.grass_temperature),
         optimizer=OptimizerConfig(lr=args.lr, total_steps=args.steps,
                                   offload=args.offload,
+                                  moment_residency=args.moment_residency,
                                   lora_rank=args.lora_rank),
         seq_len=args.seq_len, global_batch=args.global_batch,
         steps=args.steps, seed=args.seed,
@@ -77,10 +82,13 @@ def main():
     from repro.train.trainer import Trainer
     trainer = Trainer(tcfg, mesh=mesh, batch_axes=batch_axes)
     report = trainer.method.trainable_param_report(mcfg, trainer.state)
+    resident = (f", resident {report.opt_bytes_resident / (1 << 20):.1f} MiB"
+                if report.opt_bytes_resident >= 0 else "")
     print(f"[{args.method}] trainable {report.num_params_trainable:,}/"
           f"{report.num_params_total:,} params "
           f"({report.trainable_fraction:.1%}), "
-          f"opt-state {report.opt_bytes / (1 << 20):.1f} MiB  {report.detail}")
+          f"opt-state {report.opt_bytes / (1 << 20):.1f} MiB (model)"
+          f"{resident}  {report.detail}")
     start = trainer.maybe_restore()
     if start:
         print(f"resumed from step {start}")

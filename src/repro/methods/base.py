@@ -19,13 +19,20 @@ from repro.configs.base import ModelConfig, OptimizerConfig
 
 @dataclass(frozen=True)
 class TrainableReport:
-    """What a method actually trains (paper §3.3 memory model surface)."""
+    """What a method actually trains (paper §3.3 memory model surface).
+
+    ``opt_bytes`` is the deterministic §3.3 model (2 * P_selected * B);
+    ``opt_bytes_resident`` is the *measured* accelerator-resident bytes of
+    the actual ``state["opt"]`` pytree (host-resident leaves excluded) —
+    equal to the full m/v footprint under dense residency, and only the
+    compact [k]-slot banks under banked residency."""
 
     method: str
     num_params_total: int      # all model parameters
     num_params_trainable: int  # parameters the method may update per run
     opt_bytes: int             # modeled optimizer-state bytes (m + v)
     detail: str = ""
+    opt_bytes_resident: int = -1  # measured device-resident bytes (-1 = n/a)
 
     @property
     def trainable_fraction(self) -> float:
@@ -40,7 +47,21 @@ class FinetuneMethod(Protocol):
 
     def init_state(self, model_cfg: ModelConfig, opt_cfg: OptimizerConfig,
                    seed: int = 0) -> dict:
-        """Fresh TrainState pytree (params + optimizer + method state)."""
+        """Fresh TrainState pytree (params + optimizer + method state).
+
+        For the masked-selection family, ``state["opt"]`` follows
+        ``opt_cfg.moment_residency``:
+
+        * ``"device"``: ``{"m", "v", "counts"}`` — full-shape f32 moments
+          congruent with params plus per-block bias-correction counts.
+        * ``"banked"``: ``{"banks", "slot_map", "counts", "store"}`` —
+          per-group compact moment banks ``{"m", "v", "slots"}`` with
+          leading axis min(group length, k); ``slot_map`` [num_blocks] i32
+          (block -> bank slot, -1 = host-resident, numpy, never enters
+          jit); ``store`` the full-shape backing store (numpy host arrays
+          under ``opt_cfg.offload == "host"``, device arrays otherwise).
+          See core/masked_adamw.init_banked_opt_state for the contract.
+        """
         ...
 
     def make_step(self, model_cfg: ModelConfig, opt_cfg: OptimizerConfig, *,

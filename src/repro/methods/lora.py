@@ -73,12 +73,14 @@ class LoRAMethod:
     # ------------------------------------------------------------- report
     def trainable_param_report(self, model_cfg: ModelConfig,
                                state: dict) -> TrainableReport:
+        from repro.core.offload import resident_opt_bytes
         total = sum(int(jnp.size(x)) for x in jax.tree.leaves(state["base"]))
         n_lora = lora_mod.num_lora_params(state["lora"])
         return TrainableReport(
             method=self.name, num_params_total=total,
             num_params_trainable=n_lora,
             opt_bytes=2 * n_lora * 4,  # f32 m + v on adapters only
+            opt_bytes_resident=resident_opt_bytes(state["opt"])["device"],
             detail=f"adapters on {len(state['lora'])} leaf groups")
 
 

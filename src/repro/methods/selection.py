@@ -7,6 +7,20 @@ policy selection (core/adagradselect registry) -> block-masked AdamW. One
 compiled program serves every selection outcome: masks are runtime inputs,
 so per-step dynamic selection never recompiles.
 
+Two optimizer-state residency layouts (``opt_cfg.moment_residency``):
+
+* ``"device"`` (default, the trajectory oracle): one fused jitted step;
+  ``state["opt"] = {"m", "v", "counts"}`` with full-shape f32 moments.
+* ``"banked"`` (paper §3.3): ``state["opt"] = {"banks", "slot_map",
+  "counts", "store"}`` — only selected blocks' moments are device-resident,
+  in compact [k]-slot banks backed by a full store (host RAM under
+  ``opt_cfg.offload == "host"``). The step is two compiled phases around a
+  host-side swap: phase A (forward + backward + in-jit selection) yields the
+  mask, ``masked_adamw.swap_banked`` streams evicted/admitted blocks'
+  moments store<->banks, phase B applies the banked AdamW on bank rows
+  (Pallas fused path included). Both phases compile exactly once — bank
+  slots and selected indices are runtime vectors of static shape.
+
 With ``model_cfg.gate_weight_grads`` the mask is decided BEFORE backward
 from the policy's cumulative signal and frozen blocks' weight grads are
 lax.cond-gated away (DESIGN 3.3); the observed norms are then fed back via
@@ -18,10 +32,12 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import (ModelConfig, OptimizerConfig, SelectConfig,
                                 TrainConfig)
-from repro.core import adagradselect, masked_adamw, partition as part_mod
+from repro.core import (adagradselect, masked_adamw, offload,
+                        partition as part_mod)
 from repro.core.offload import optimizer_memory_report
 from repro.methods import registry
 from repro.methods.base import TrainableReport
@@ -38,29 +54,41 @@ class SelectionMethod:
     sel_cfg: SelectConfig
 
     # -------------------------------------------------------------- state
+    def slot_capacity(self, model_cfg: ModelConfig) -> int:
+        """Static bank-slot / selected-index capacity: the policy's k plus
+        any always-include blocks, capped at num_blocks."""
+        nb = model_cfg.num_blocks
+        return min(nb, self.sel_cfg.num_selected(nb)
+                   + len(self.sel_cfg.always_include))
+
     def init_state(self, model_cfg: ModelConfig, opt_cfg: OptimizerConfig,
                    seed: int = 0) -> dict:
         return step_mod.init_train_state(
             model_cfg, seed, moment_dtype=jnp.dtype(opt_cfg.moment_dtype),
-            policy=self.sel_cfg.policy)
+            policy=self.sel_cfg.policy,
+            select_k=self.slot_capacity(model_cfg),
+            moment_residency=opt_cfg.moment_residency,
+            store_policy=opt_cfg.offload)
 
     # --------------------------------------------------------------- step
     def make_step(self, model_cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
                   mesh=None, batch_axes=("data",), use_pallas: bool = False,
                   donate: bool = True):
-        """-> jitted (state, batch) -> (state, metrics).
+        """-> ``(state, batch) -> (state, metrics)``.
 
-        state = {"params", "opt" {m,v,counts}, "sel" (policy state),
-                 "step" i32}.
+        Dense residency: one jitted function. Banked residency: a Python
+        driver around two jitted phases (exposed as ``.forward_select`` /
+        ``.apply`` attributes) with the host-side moment swap in between.
         """
         sel_cfg = self.sel_cfg
         model = model_registry.get(model_cfg)
         partition = part_mod.build_partition(model_cfg)
         gate = model_cfg.gate_weight_grads
 
-        def step_fn(state, batch):
-            sel_state = state["sel"]
-
+        def forward_select(params, sel_state, batch):
+            """Shared phase A: loss, clipped grads, per-block norms, and the
+            in-jit policy selection (traced into the fused dense step and
+            compiled standalone for the banked step)."""
             # gate mode decides the mask BEFORE backward (cumulative signal)
             pre_mask = None
             if gate:
@@ -69,15 +97,15 @@ class SelectionMethod:
                     jnp.zeros((partition.num_blocks,), jnp.float32),
                     partition.num_blocks)
 
-            def loss_fn(params, mb):
+            def loss_fn(p, mb):
                 masks = (part_mod.layer_masks_dict(partition, pre_mask)
                          if gate else None)
-                return step_mod.model_loss(model, model_cfg, params, mb,
+                return step_mod.model_loss(model, model_cfg, p, mb,
                                            mesh=mesh, batch_axes=batch_axes,
                                            masks=masks)
 
             (loss, metrics), grads = step_mod.accumulate_grads(
-                loss_fn, state["params"], batch, opt_cfg.microbatch,
+                loss_fn, params, batch, opt_cfg.microbatch,
                 jnp.dtype(opt_cfg.accum_dtype))
 
             grads, gnorm = masked_adamw.clip_by_global_norm(
@@ -91,21 +119,83 @@ class SelectionMethod:
                                                   block_norms)
             else:
                 mask, sel_state = adagradselect.select(
-                    sel_cfg, state["sel"], block_norms, partition.num_blocks)
+                    sel_cfg, sel_state, block_norms, partition.num_blocks)
+            return grads, mask, sel_state, loss, metrics, gnorm, block_norms
 
+        def step_metrics(metrics, loss, gnorm, lr, mask, block_norms, step):
+            return {**metrics, "loss": loss, "grad_norm": gnorm, "lr": lr,
+                    "epsilon": adagradselect.epsilon(sel_cfg, step),
+                    "num_selected": jnp.sum(mask.astype(jnp.int32)),
+                    "mask": mask, "block_norms": block_norms}
+
+        if opt_cfg.moment_residency == "banked":
+            return self._make_banked_step(
+                opt_cfg, partition, forward_select, step_metrics,
+                use_pallas=use_pallas, donate=donate)
+        if opt_cfg.moment_residency != "device":
+            raise ValueError(
+                f"unknown moment_residency {opt_cfg.moment_residency!r}")
+
+        def step_fn(state, batch):
+            grads, mask, sel_state, loss, metrics, gnorm, block_norms = \
+                forward_select(state["params"], state["sel"], batch)
             lr = learning_rate(opt_cfg, state["step"])
             params, opt = masked_adamw.update(
                 opt_cfg, partition, state["params"], grads, state["opt"],
                 mask, lr, use_pallas=use_pallas)
             new_state = {"params": params, "opt": opt, "sel": sel_state,
                          "step": state["step"] + 1}
-            metrics = {**metrics, "loss": loss, "grad_norm": gnorm, "lr": lr,
-                       "epsilon": adagradselect.epsilon(sel_cfg, state["step"]),
-                       "num_selected": jnp.sum(mask.astype(jnp.int32)),
-                       "mask": mask, "block_norms": block_norms}
-            return new_state, metrics
+            return new_state, step_metrics(metrics, loss, gnorm, lr, mask,
+                                           block_norms, state["step"])
 
         return jax.jit(step_fn, donate_argnums=(0,) if donate else ())
+
+    def _make_banked_step(self, opt_cfg, partition, forward_select,
+                          step_metrics, *, use_pallas, donate):
+        fwd = jax.jit(forward_select)
+
+        def apply_fn(params, grads, banks, counts, mask, step):
+            lr = learning_rate(opt_cfg, step)
+            params, banks, counts = masked_adamw.banked_update(
+                opt_cfg, partition, params, grads, banks, counts, mask, lr,
+                use_pallas=use_pallas)
+            return params, banks, counts, lr
+
+        # params/banks/counts are replaced 1:1 -> donate; grads have no
+        # same-shaped output (moments are compact), donating them only warns
+        apply = jax.jit(apply_fn,
+                        donate_argnums=(0, 2, 3) if donate else ())
+
+        nb = partition.num_blocks
+
+        def step_fn(state, batch):
+            grads, mask, sel_state, loss, metrics, gnorm, block_norms = fwd(
+                state["params"], state["sel"], batch)
+            opt = state["opt"]
+            # selection-change boundary: stream moments store<->banks. The
+            # policy's static-shape [k] indices vector is the one host sync
+            # the paper's design pays (k ids, not a [num_blocks] mask).
+            idx = np.asarray(sel_state["indices"])
+            mask_host = np.zeros((nb,), bool)
+            mask_host[idx[idx < nb]] = True
+            store = offload.ensure_store_residency(opt["store"],
+                                                   opt_cfg.offload)
+            banks, slot_map, store = masked_adamw.swap_banked(
+                partition, opt["banks"], store, opt["slot_map"], mask_host)
+            params, banks, counts, lr = apply(
+                state["params"], grads, banks, opt["counts"], mask,
+                state["step"])
+            new_state = {"params": params,
+                         "opt": {"banks": banks, "slot_map": slot_map,
+                                 "counts": counts, "store": store},
+                         "sel": sel_state, "step": state["step"] + 1}
+            return new_state, step_metrics(metrics, loss, gnorm, lr, mask,
+                                           block_norms, state["step"])
+
+        # expose the compiled phases (dry-run lowering, recompile tests)
+        step_fn.forward_select = fwd
+        step_fn.apply = apply
+        return step_fn
 
     # --------------------------------------------------------------- eval
     def eval_params(self, model_cfg: ModelConfig, opt_cfg: OptimizerConfig,
@@ -117,14 +207,18 @@ class SelectionMethod:
                                state: dict) -> TrainableReport:
         partition = part_mod.build_partition(model_cfg)
         rep = optimizer_memory_report(partition, state["params"],
-                                      self.sel_cfg.k_percent)
+                                      self.sel_cfg.k_percent,
+                                      opt_state=state["opt"])
         k = self.sel_cfg.num_selected(partition.num_blocks)
         return TrainableReport(
             method=self.name, num_params_total=rep.p_total,
             num_params_trainable=rep.p_selected, opt_bytes=rep.mem_selective,
+            opt_bytes_resident=rep.mem_measured_device,
             detail=f"policy={self.sel_cfg.policy} "
                    f"k={self.sel_cfg.k_percent:.0f}% "
-                   f"({k}/{partition.num_blocks} blocks/step)")
+                   f"({k}/{partition.num_blocks} blocks/step) "
+                   f"resident={rep.mem_measured_device}B "
+                   f"host={rep.mem_measured_host}B")
 
 
 def _selection_factory(policy: str, name: str | None = None, **overrides):

@@ -92,17 +92,47 @@ def accumulate_grads(loss_fn, params, batch, n_micro: int,
 
 def init_train_state(model_cfg: ModelConfig, seed: int = 0,
                      moment_dtype=jnp.float32,
-                     policy: str = "adagradselect") -> dict:
+                     policy: str = "adagradselect",
+                     select_k: int | None = None,
+                     moment_residency: str = "device",
+                     store_policy: str = "host") -> dict:
     """TrainState for the masked-selection family: params + masked-AdamW
-    moments + the policy's selection-state pytree."""
+    moments + the policy's selection-state pytree.
+
+    ``moment_residency == "device"`` (default): ``state["opt"]`` is the
+    dense layout ``{"m", "v", "counts"}`` with full-shape moments.
+    ``moment_residency == "banked"``: ``state["opt"]`` is the compact
+    layout ``{"banks", "slot_map", "counts", "store"}`` — [k]-slot device
+    moment banks over a full store placed per ``store_policy`` ("host" ->
+    host RAM; see masked_adamw.init_banked_opt_state). ``select_k`` caps
+    the slot count (and the selection state's static ``indices`` length);
+    default: ``num_blocks``."""
     model = registry.get(model_cfg)
     partition = part_mod.build_partition(model_cfg)
     params = model.init(jax.random.PRNGKey(seed), model_cfg)
+    if moment_residency == "banked":
+        if store_policy == "zero1":
+            # a replicated device store on top of the banks would be
+            # strictly worse than dense zero1 — reject instead of degrading
+            raise ValueError(
+                "moment_residency='banked' does not support offload='zero1' "
+                "(the full store is not ZeRO-sharded yet); use "
+                "offload='host' for the paper's host-resident store, or "
+                "moment_residency='device' to keep dense ZeRO-1 moments")
+        k = select_k if select_k is not None else partition.num_blocks
+        opt = masked_adamw.init_banked_opt_state(
+            partition, params, k, moment_dtype,
+            store_policy="host" if store_policy == "host" else "device")
+    elif moment_residency == "device":
+        opt = masked_adamw.init_opt_state(partition, params, moment_dtype)
+    else:
+        raise ValueError(f"unknown moment_residency {moment_residency!r}; "
+                         f"expected 'device' or 'banked'")
     return {
         "params": params,
-        "opt": masked_adamw.init_opt_state(partition, params, moment_dtype),
+        "opt": opt,
         "sel": adagradselect.init_state(partition.num_blocks, seed,
-                                        policy=policy),
+                                        policy=policy, k=select_k),
         "step": jnp.zeros((), jnp.int32),
     }
 

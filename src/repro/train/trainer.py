@@ -86,22 +86,25 @@ class Trainer:
         steps = steps if steps is not None else tcfg.steps
         step0 = start_step if start_step is not None else int(self.state["step"])
         last = step0 + steps - 1
-        pending = []  # device-scalar losses since the last sync boundary
+        pending = []  # (step, device-scalar loss) since the last boundary
         t0 = time.perf_counter()
         for step in range(step0, step0 + steps):
             batch = self._device_batch(self.data.batch_at(step))
             if not pending:
                 t0 = time.perf_counter()
             self.state, metrics = self.step_fn(self.state, batch)
-            self.log.steps.append(step)
-            pending.append(metrics["loss"])
+            pending.append((step, metrics["loss"]))
 
             at_log = tcfg.log_every and step % tcfg.log_every == 0
             if (at_log or step == last or not tcfg.log_every
                     or self._watchdog_active):
                 jax.block_until_ready(metrics["loss"])
                 dt = (time.perf_counter() - t0) / len(pending)
-                self.log.losses.extend(float(np.asarray(x)) for x in pending)
+                # steps/losses/step_times extend together at the boundary so
+                # the lists never misalign if the loop exits mid-window
+                self.log.steps.extend(s for s, _ in pending)
+                self.log.losses.extend(float(np.asarray(x))
+                                       for _, x in pending)
                 self.log.step_times.extend([dt] * len(pending))
                 pending = []
 

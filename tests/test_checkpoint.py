@@ -82,6 +82,85 @@ def test_training_resume_equivalence(tmp_path):
                                    np.asarray(b, np.float32), atol=1e-6)
 
 
+def _banked_tcfg(ckdir, policy="lisa", steps=6):
+    """Banked-residency config whose mask changes mid-run (lisa interval 4:
+    a checkpoint at step 3 lands mid-selection-interval)."""
+    from repro.configs.base import OptimizerConfig, SelectConfig, TrainConfig
+    cfg = get_smoke_config("qwen2.5-0.5b").replace(remat="none")
+    return TrainConfig(
+        model=cfg,
+        select=SelectConfig(policy=policy, k_percent=40, lisa_interval=4),
+        optimizer=OptimizerConfig(lr=1e-3, schedule="constant",
+                                  warmup_steps=0, moment_residency="banked",
+                                  offload="host"),
+        seq_len=48, global_batch=4, steps=steps, log_every=0,
+        checkpoint_dir=ckdir, checkpoint_every=3, checkpoint_keep=3)
+
+
+@pytest.mark.parametrize("policy", ["lisa", "adagradselect"])
+def test_banked_training_resume_equivalence(tmp_path, policy):
+    """Banked state (device banks + slot_map + host-resident full store)
+    saved mid-selection-interval, restored, and continued must match an
+    uninterrupted run — params AND materialized moments."""
+    from repro.core import masked_adamw
+    from repro.core import partition as pmod
+    from repro.train.trainer import Trainer
+
+    t1 = Trainer(_banked_tcfg("", policy), method=policy)
+    t1.train(steps=6)
+
+    ckdir = str(tmp_path / policy)
+    t2 = Trainer(_banked_tcfg(ckdir, policy), method=policy)
+    t2.train(steps=3)
+    t3 = Trainer(_banked_tcfg(ckdir, policy), method=policy)
+    start = t3.maybe_restore()
+    assert start == 3
+    # slot_map + store round-tripped through the checkpoint
+    np.testing.assert_array_equal(np.asarray(t3.state["opt"]["slot_map"]),
+                                  np.asarray(t2.state["opt"]["slot_map"]))
+    t3.train(steps=3, start_step=start)
+
+    for a, b in zip(jax.tree.leaves(t1.state["params"]),
+                    jax.tree.leaves(t3.state["params"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-6)
+    part = pmod.build_partition(t1.tcfg.model)
+    m1, v1 = masked_adamw.materialize_moments(part, t1.state["opt"])
+    m3, v3 = masked_adamw.materialize_moments(part, t3.state["opt"])
+    for a, b in zip(jax.tree.leaves((m1, v1)), jax.tree.leaves((m3, v3))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
+
+
+def test_banked_state_roundtrip_bitexact(tmp_path):
+    """The banked opt layout (incl. numpy host store + slot_map) flattens
+    and restores bit-exactly through the npz format."""
+    cfg = get_smoke_config("llama3.2-1b")
+    state = step_mod.init_train_state(cfg, seed=0, select_k=3,
+                                      moment_residency="banked",
+                                      store_policy="host")
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    mgr.save(4, state)
+    restored, step = mgr.restore(state)
+    assert step == 4
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_save_snapshots_host_store(tmp_path):
+    """In-place mutation of the host store after save() must not leak into
+    the serialized snapshot (the writer owns a copy)."""
+    store_leaf = np.arange(8, dtype=np.float32)
+    state = {"opt": {"store": {"x": store_leaf}}}
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=True)
+    mgr.save(1, state)
+    store_leaf[:] = -1.0  # simulates the next step's swap_banked write-back
+    mgr.wait()
+    restored, _ = mgr.restore({"opt": {"store": {"x": np.zeros(8,
+                                                              np.float32)}}})
+    np.testing.assert_array_equal(restored["opt"]["store"]["x"],
+                                  np.arange(8, dtype=np.float32))
+
+
 def test_elastic_restore_across_device_counts(multidevice):
     """Save on a 4-device (2,2) mesh, restore+reshard onto (4,2) and (1,1):
     the restart-based elasticity path."""
