@@ -119,8 +119,14 @@ def bench_staggered(cfg, params, *, num_requests, prompt_lens, new_tokens,
             eos)
 
 
+# last collected structured table (read by benchmarks/run.py --json for the
+# consolidated trajectory artifact; ratios are what the baseline diff pins)
+LAST_TABLE: dict | None = None
+
+
 def run(arch: str = "llama3.2-1b", **_):
     """CSV rows for benchmarks/run.py: µs per generated token + tok/s."""
+    global LAST_TABLE
     cfg = get_smoke_config(arch).replace(ssm_chunk=16)
     params = registry.get(cfg).init(jax.random.PRNGKey(0), cfg)
     leg, eng = bench_uniform(cfg, params, batch=4, prompt_len=16,
@@ -129,6 +135,13 @@ def run(arch: str = "llama3.2-1b", **_):
                                       prompt_lens=[8, 12, 16], new_tokens=16,
                                       chunk=8, num_slots=4, stagger=1,
                                       repeats=2)
+    LAST_TABLE = {
+        "arch": arch,
+        "uniform_legacy_tok_s": leg, "uniform_engine_tok_s": eng,
+        "uniform_engine_vs_legacy": eng / max(1e-9, leg),
+        "staggered_legacy_tok_s": gl, "staggered_engine_tok_s": ge,
+        "staggered_engine_vs_legacy": ge / max(1e-9, gl),
+    }
     return [
         ("serve/uniform_legacy", 1e6 / leg, f"{leg:.1f} tok/s"),
         ("serve/uniform_engine", 1e6 / eng, f"{eng:.1f} tok/s"),

@@ -1,0 +1,99 @@
+"""Diff a consolidated benchmark JSON (benchmarks/run.py --json) against the
+committed baseline and fail on regressions of the key trajectory metrics.
+
+Key metrics (direction-aware, default tolerance 20%):
+
+  * ``banked_device_vs_full`` — banked residency's device-resident optimizer
+    bytes as a fraction of full FT (memory table; lower is better). This is
+    deterministic, so any growth means the residency machinery regressed.
+  * ``uniform_engine_vs_legacy`` / ``staggered_engine_vs_legacy`` — the
+    serve engine's tok/s (goodput) as a multiple of the legacy static-batch
+    loop (serve table; higher is better). Ratios of two timings on the same
+    runner, so CI noise largely cancels.
+
+Usage:  python -m benchmarks.diff_baseline BENCH_ci.json BENCH_baseline.json
+Exit codes: 0 ok, 1 regression, 2 missing metric/file.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# (name, extractor, direction) — direction +1: higher is better, -1: lower
+_MEM_ROW = "adagradselect_banked"
+
+
+def _mem_ratio(payload: dict):
+    table = payload.get("memory_table") or []
+    rows = table["rows"] if isinstance(table, dict) else table
+    for row in rows or []:
+        if row.get("name") == _MEM_ROW:
+            return row.get("device_vs_full")
+    return None
+
+
+KEY_METRICS = (
+    ("banked_device_vs_full", _mem_ratio, -1),
+    ("uniform_engine_vs_legacy",
+     lambda p: (p.get("serve_table") or {}).get("uniform_engine_vs_legacy"),
+     +1),
+    ("staggered_engine_vs_legacy",
+     lambda p: (p.get("serve_table") or {}).get("staggered_engine_vs_legacy"),
+     +1),
+)
+
+
+def diff(current: dict, baseline: dict, tolerance: float = 0.20) -> list[str]:
+    """-> list of human-readable regression messages (empty = pass)."""
+    failures = []
+    for name, extract, direction in KEY_METRICS:
+        cur, base = extract(current), extract(baseline)
+        if base is None:
+            continue  # metric not in the committed baseline yet
+        if cur is None:
+            failures.append(f"{name}: missing from current run "
+                            f"(baseline {base:.4f})")
+            continue
+        if direction > 0:
+            regressed = cur < base * (1.0 - tolerance)
+            verdict = f"{cur:.4f} < {base:.4f} * {1 - tolerance:.2f}"
+        else:
+            regressed = cur > base * (1.0 + tolerance)
+            verdict = f"{cur:.4f} > {base:.4f} * {1 + tolerance:.2f}"
+        status = "REGRESSION" if regressed else "ok"
+        print(f"{name:32s} current={cur:10.4f} baseline={base:10.4f} "
+              f"[{status}]")
+        if regressed:
+            failures.append(f"{name}: {verdict}")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="BENCH_ci.json from this run")
+    ap.add_argument("baseline", help="committed BENCH_baseline.json")
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="allowed relative regression (default 0.20)")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.current) as f:
+            current = json.load(f)
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"diff_baseline: cannot load inputs: {e}", file=sys.stderr)
+        return 2
+    failures = diff(current, baseline, args.tolerance)
+    if failures:
+        print("\nbenchmark regressions vs committed baseline:",
+              file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print("benchmark trajectory within tolerance of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

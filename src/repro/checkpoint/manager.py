@@ -70,13 +70,12 @@ class CheckpointManager:
     def save(self, step: int, state, extra_meta: dict | None = None):
         """Snapshot to host synchronously, serialize asynchronously."""
         self.wait()  # one in-flight save at a time
-        # np.array (not asarray) on host-resident leaves: the banked
-        # optimizer's full store is mutated in place by later train steps,
-        # so the async writer must serialize its own copy
-        host_state = jax.tree.map(
-            lambda x: np.array(x) if isinstance(x, np.ndarray)
-            else np.asarray(x),
-            jax.device_get(state))
+        # np.array copies EVERY leaf (device_get yields numpy, sometimes
+        # aliasing donated buffers; the banked optimizer's host store is
+        # mutated in place by later train steps) — the async writer must
+        # own a consistent snapshot, so do not optimize the copy away.
+        # Sharded jax.Arrays gather to full shape here (gather-on-save).
+        host_state = jax.tree.map(np.array, jax.device_get(state))
         meta = {"step": int(step), "time": time.time(),
                 "process_count": jax.process_count(), **(extra_meta or {})}
 
@@ -134,7 +133,13 @@ class CheckpointManager:
     def restore(self, target, step: int | None = None, shardings=None):
         """``target``: pytree of arrays or ShapeDtypeStructs defining the
         structure/shapes. ``shardings``: optional matching pytree — this is
-        where elastic resharding happens (device_put onto the new mesh)."""
+        where elastic resharding happens (device_put onto the new mesh).
+        Entries that are not ``jax.sharding.Sharding`` instances (e.g. the
+        trainer's HOST_RESIDENT markers for the banked slot_map / host
+        store) leave the restored leaf as numpy in host RAM. Sharded leaves
+        were gathered to full shape at save time (``jax.device_get``), so a
+        restore may land on any device count — including re-sharding a
+        ZeRO-1 store onto a different dp degree."""
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
@@ -147,6 +152,7 @@ class CheckpointManager:
         state = _unflatten_into(target, flat)
         if shardings is not None:
             state = jax.tree.map(
-                lambda x, s: jax.device_put(x, s) if s is not None else jax.device_put(x),
+                lambda x, s: jax.device_put(x, s)
+                if isinstance(s, jax.sharding.Sharding) else x,
                 state, shardings)
         return state, step

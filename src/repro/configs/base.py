@@ -217,7 +217,8 @@ class OptimizerConfig:
     #   moment_residency "banked": only selected blocks' moments are device-
     #     resident, in compact [k]-slot banks; ``offload`` governs the full
     #     backing store instead ("host" -> host RAM, streamed at selection
-    #     changes; "none"/"zero1" -> device-resident store).
+    #     changes; "none" -> replicated device store; "zero1" -> device
+    #     store sharded 1/dp over the mesh's data axis — requires a mesh).
     moment_residency: str = "device"  # "device" | "banked"
     offload: str = "none"          # "none" | "host" | "zero1"
     moment_dtype: str = "float32"  # "float32" | "bfloat16" (halves m/v HBM)

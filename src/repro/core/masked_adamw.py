@@ -119,7 +119,8 @@ def bank_capacity(group, k_slots: int) -> int:
 
 def init_banked_opt_state(partition: BlockPartition, params: dict,
                           k_slots: int, moment_dtype=jnp.float32,
-                          store_policy: str | None = "host") -> dict:
+                          store_policy: str | None = "host",
+                          mesh=None) -> dict:
     """Compact banked optimizer state:
 
       banks[key]  — per partition group: ``m``/``v`` pytrees with leading
@@ -134,7 +135,9 @@ def init_banked_opt_state(partition: BlockPartition, params: dict,
                     the dense layout; tiny, always device-resident).
       store       — full-shape backing store (core/offload.init_full_store);
                     omitted when ``store_policy`` is None (eval_shape
-                    projections of the device-resident footprint).
+                    projections of the device-resident footprint). Under
+                    ``store_policy == "zero1"`` the store is device-resident
+                    but sharded 1/dp over ``mesh``'s data axis.
 
     Nothing is resident initially; the first ``swap_banked`` admits the
     first selection with zero rows from the store (zero-init on first
@@ -163,7 +166,8 @@ def init_banked_opt_state(partition: BlockPartition, params: dict,
     }
     if store_policy is not None:
         opt["store"] = offload.init_full_store(partition, params,
-                                               moment_dtype, store_policy)
+                                               moment_dtype, store_policy,
+                                               mesh=mesh)
     return opt
 
 
@@ -216,14 +220,16 @@ def swap_banked(partition: BlockPartition, banks: dict, store: dict,
                         sl = offload.store_write_rows(sl, ev_blocks, rows)
                     if len(ad_blocks):
                         rows = offload.store_read_rows(sl, ad_blocks)
-                        bl = part_mod.scatter_rows(bl, ad_slots,
-                                                   jnp.asarray(rows))
+                        new_bl = part_mod.scatter_rows(bl, ad_slots,
+                                                       jnp.asarray(rows))
+                        bl = offload._keep_sharding(new_bl, bl)
                 else:  # the single block's moments are the whole leaf
                     if len(ev_blocks):
                         sl = offload.store_write_leaf(sl, np.asarray(bl))
                     if len(ad_blocks):
-                        bl = jnp.asarray(np.asarray(sl),
-                                         dtype=np.asarray(bl).dtype)
+                        bl = offload._keep_sharding(
+                            jnp.asarray(np.asarray(sl),
+                                        dtype=np.asarray(bl).dtype), bl)
                 out_b.append(bl)
                 out_s.append(sl)
             group_bank[mom] = jax.tree.unflatten(b_def, out_b)
@@ -233,7 +239,8 @@ def swap_banked(partition: BlockPartition, banks: dict, store: dict,
         slots_vec[ad_slots] = ad_blocks
         slot_map[g.start + ev_blocks] = -1
         slot_map[g.start + ad_blocks] = ad_slots
-        group_bank["slots"] = jnp.asarray(slots_vec)
+        group_bank["slots"] = offload._keep_sharding(jnp.asarray(slots_vec),
+                                                     bank["slots"])
         new_banks[g.key] = group_bank
         new_store[g.key] = group_store
     return new_banks, slot_map, new_store

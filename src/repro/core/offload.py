@@ -11,8 +11,13 @@ states occupy accelerator memory. Two mechanisms implement that here:
      "host"  — numpy arrays in host RAM; rows stream host<->device at
                selection-change boundaries (matches the paper 1:1, works on
                every backend — no XLA memory kinds needed).
-     "zero1" / "none" — store stays on device (zero1 additionally sharded by
-               the caller via ``moment_shardings`` when a mesh is present).
+     "zero1" — store stays on device, ZeRO-1-sharded over the mesh's data
+               axis (``distributed.sharding.store_specs``): each device owns
+               1/dp of the backing rows and the boundary swap streams only
+               the shard slices holding the swapped block ids. Requires a
+               mesh (rejected at init without one — a replicated device
+               store would be strictly worse than dense ZeRO-1).
+     "none"  — store stays on device, replicated (testing/uniformity).
 
 2. **Dense residency** (the default / oracle path): full f32 m/v for every
    parameter; ``moment_shardings`` places them —
@@ -82,32 +87,65 @@ def moment_shardings(policy: str, param_specs: dict, mesh,
 
 
 def init_full_store(partition: BlockPartition, params: dict,
-                    moment_dtype=jnp.float32, policy: str = "host") -> dict:
+                    moment_dtype=jnp.float32, policy: str = "host",
+                    mesh=None) -> dict:
     """Full-shape m/v store backing the compact device banks (banked
     residency). ``policy == "host"`` -> numpy arrays in host RAM (the
     paper's design — moments stream host<->device at selection changes);
-    ``"device"`` -> device arrays (testing/uniformity; no memory win)."""
+    ``"device"`` -> device arrays (testing/uniformity; no memory win);
+    ``"zero1"`` -> device arrays ZeRO-1-sharded over the mesh's data axis
+    (``distributed.sharding.store_specs``): each device owns 1/dp of the
+    store rows, so banked residency composes with data parallelism instead
+    of paying a replicated backing store per device."""
     np_dtype = np.dtype(moment_dtype)
 
-    def zeros(x):
+    shardings = None
+    if policy == "zero1":
+        if mesh is None:
+            raise ValueError("init_full_store(policy='zero1') needs a mesh "
+                             "to shard the store over the data axis")
+        from repro.distributed.sharding import store_shardings
+        shapes = {g.key: {"m": params[g.key], "v": params[g.key]}
+                  for g in partition.groups}
+        shardings = store_shardings(partition, shapes, mesh)
+
+    def zeros(x, sh=None):
         if policy == "host":
             return np.zeros(x.shape, np_dtype)
-        return jnp.zeros(x.shape, moment_dtype)
+        z = jnp.zeros(x.shape, moment_dtype)
+        return jax.device_put(z, sh) if sh is not None else z
 
+    if shardings is not None:
+        return {g.key: jax.tree.map(zeros,
+                                    {"m": params[g.key], "v": params[g.key]},
+                                    shardings[g.key])
+                for g in partition.groups}
     return {g.key: {"m": jax.tree.map(zeros, params[g.key]),
                     "v": jax.tree.map(zeros, params[g.key])}
             for g in partition.groups}
 
 
+def _keep_sharding(new, ref):
+    """Device stores may carry an explicit (ZeRO-1) sharding; scatter/gather
+    outputs must stay on that layout or the compiled banked phases would see
+    a different input sharding next boundary and recompile."""
+    ref_sh = getattr(ref, "sharding", None)
+    if ref_sh is not None and getattr(new, "sharding", None) != ref_sh:
+        return jax.device_put(new, ref_sh)
+    return new
+
+
 def store_write_rows(leaf, blocks, rows):
     """Write evicted bank rows back into a stacked store leaf. Host (numpy)
     leaves are updated in place — the store is owned by the optimizer and
-    snapshots copy (checkpoint/manager.py); device leaves functionally."""
+    snapshots copy (checkpoint/manager.py); device leaves functionally (a
+    ZeRO-1-sharded leaf only touches the shards owning ``blocks``)."""
     if isinstance(leaf, np.ndarray):
         leaf[blocks] = np.asarray(rows, dtype=leaf.dtype)
         return leaf
-    return jnp.asarray(leaf).at[jnp.asarray(blocks)].set(
+    new = jnp.asarray(leaf).at[jnp.asarray(blocks)].set(
         jnp.asarray(rows, dtype=leaf.dtype))
+    return _keep_sharding(new, leaf)
 
 
 def store_read_rows(leaf, blocks):
@@ -117,18 +155,25 @@ def store_read_rows(leaf, blocks):
     return jnp.asarray(leaf)[jnp.asarray(blocks)]
 
 
-def ensure_store_residency(store: dict, policy: str) -> dict:
+def ensure_store_residency(store: dict, policy: str, shardings=None) -> dict:
     """Re-place a full store on its configured side. Checkpoint restore
     materializes every leaf as numpy, which would silently demote a
     device-resident store to host (residency is dispatched on the leaf
-    type); the store is never mixed, so one leaf decides."""
+    type); the store is never mixed, so one leaf decides. For ``"zero1"``
+    pass the store's sharding tree so restored leaves land back on their
+    1/dp data-axis shards instead of a single device."""
     leaves = jax.tree.leaves(store)
     if not leaves:
         return store
     is_np = isinstance(leaves[0], np.ndarray)
     if policy == "host":
         return store if is_np else jax.tree.map(np.asarray, store)
-    return jax.tree.map(jnp.asarray, store) if is_np else store
+    if not is_np:
+        return store
+    if shardings is not None:
+        return jax.tree.map(lambda x, sh: jax.device_put(x, sh),
+                            store, shardings)
+    return jax.tree.map(jnp.asarray, store)
 
 
 def store_write_leaf(leaf, value):
@@ -136,22 +181,38 @@ def store_write_leaf(leaf, value):
     if isinstance(leaf, np.ndarray):
         leaf[...] = np.asarray(value, dtype=leaf.dtype)
         return leaf
-    return jnp.asarray(value, dtype=leaf.dtype)
+    return _keep_sharding(jnp.asarray(value, dtype=leaf.dtype), leaf)
 
 
 def resident_opt_bytes(opt_state) -> dict:
     """Measured optimizer-state bytes of an actual TrainState subtree, split
     by residency: numpy leaves live in host RAM, everything else is
     accelerator-resident. Accepts concrete arrays or ShapeDtypeStructs
-    (eval_shape output counts as device — the dry-run's measured column)."""
-    dev = host = 0
+    (eval_shape output counts as device — the dry-run's measured column).
+
+    ``device_per_device`` is the per-device slice of the device total: a
+    leaf carrying an explicit sharding contributes only its shard bytes
+    (``sharding.shard_shape``), so a ZeRO-1-sharded store measures 1/dp of
+    its replicated layout while replicated/unsharded leaves count in full.
+    """
+    dev = host = dev_local = 0
     for leaf in jax.tree.leaves(opt_state):
         nbytes = int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
         if isinstance(leaf, np.ndarray):
             host += nbytes
-        else:
-            dev += nbytes
-    return {"device": dev, "host": host}
+            continue
+        dev += nbytes
+        local = nbytes
+        sh = getattr(leaf, "sharding", None)
+        if sh is not None:
+            try:
+                shard_shape = sh.shard_shape(tuple(leaf.shape))
+                local = (int(np.prod(shard_shape))
+                         * np.dtype(leaf.dtype).itemsize)
+            except Exception:  # noqa: BLE001 — sharding types without it
+                pass
+        dev_local += local
+    return {"device": dev, "host": host, "device_per_device": dev_local}
 
 
 @dataclass(frozen=True)

@@ -22,6 +22,22 @@ from repro.configs.base import ModelConfig
 from repro.utils.trees import tree_map_with_path
 
 
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` across jax lines: the >=0.6 line takes
+    ``check_vma``, older lines spell it ``check_rep`` (and pre-promotion
+    only ship ``jax.experimental.shard_map``). Every in-repo shard_map goes
+    through here so the repo runs on both."""
+    import inspect
+    if hasattr(jax, "shard_map"):
+        sm = jax.shard_map
+    else:  # pragma: no cover - older jax line
+        from jax.experimental.shard_map import shard_map as sm
+    kw = ("check_vma" if "check_vma" in inspect.signature(sm).parameters
+          else "check_rep")
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              **{kw: check})
+
+
 def _model_dim(mesh) -> int:
     return dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
 
@@ -118,6 +134,36 @@ def batch_spec(mesh) -> P:
     return P(batch_axes_of(mesh))
 
 
+def canonical_spec(spec: P) -> P:
+    """Strip trailing ``None`` entries: ``P(None,)`` and ``P()`` describe
+    the same placement but compare unequal, and a jitted step whose output
+    constraint normalizes differently from the initial ``device_put`` would
+    recompile on its second call. Canonicalize wherever specs feed a
+    sharding that round-trips through a compiled step."""
+    parts = list(spec)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def mesh_canonical_spec(spec: P, mesh) -> P:
+    """``canonical_spec`` plus dropping axes of mesh size 1: on a pure-DP
+    mesh ``P(None, "model")`` places identically to ``P()`` and jax's
+    sharding normalization inside jit reflects that — placements built from
+    the verbatim rule table would mismatch the step's constrained outputs
+    and break compile-once. Single-element tuples collapse to the axis."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    keep = lambda ax: sizes.get(ax, 1) > 1  # noqa: E731
+    parts = []
+    for pt in spec:
+        if isinstance(pt, tuple):
+            kept = tuple(a for a in pt if keep(a))
+            parts.append(kept[0] if len(kept) == 1 else (kept or None))
+        else:
+            parts.append(pt if (pt is None or keep(pt)) else None)
+    return canonical_spec(P(*parts))
+
+
 def apply_zero1(specs, params_shapes, mesh, data_axis: str = "data"):
     """Moment specs: additionally shard the first dim that is (a) unsharded
     and (b) divisible by the data-axis size. Falls back to the param spec."""
@@ -135,7 +181,7 @@ def apply_zero1(specs, params_shapes, mesh, data_axis: str = "data"):
         for i, (dim, pt) in enumerate(zip(leaf.shape, parts)):
             if pt is None and dim % d == 0 and dim >= d:
                 parts[i] = data_axis
-                return P(*parts)
+                return canonical_spec(P(*parts))
         return spec
 
     return tree_map_with_path(one, params_shapes, specs)
@@ -146,3 +192,56 @@ def sds_with_sharding(shapes, shardings):
     return jax.tree.map(
         lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
         shapes, shardings)
+
+
+# ------------------------------------------------- banked-store ZeRO-1 layout
+
+# Marker used in sharding trees for leaves that intentionally live in host
+# RAM as numpy (the banked slot_map and a "host"-policy full store): tree-
+# congruent with the TrainState, never device_put. String (not None) so
+# pytree mapping over (state, shardings) stays structurally exact.
+HOST_RESIDENT = "host"
+
+
+def data_axis_size(mesh, data_axis: str = "data") -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[data_axis]
+
+
+def store_specs(partition, store_shapes: dict, mesh,
+                data_axis: str = "data") -> dict:
+    """ZeRO-1 PartitionSpecs for the banked optimizer's full backing store
+    (``core.offload.init_full_store`` under ``offload == "zero1"``).
+
+    Stacked groups shard the leading block axis over ``data`` — each device
+    owns ``1/dp`` of the store rows, and the selection-boundary swap
+    (``masked_adamw.swap_banked``) only touches the shard(s) holding the
+    evicted/admitted block ids. When the block axis does not divide the dp
+    degree (or for unstacked groups, where the whole leaf is one block), the
+    first divisible dim is sharded instead; fully indivisible leaves stay
+    replicated. ``slot_map`` stays host-global: every process plans the same
+    swap from the same [num_blocks] vector.
+    """
+    d = data_axis_size(mesh, data_axis)
+
+    def leaf_spec(stacked: bool, leaf) -> P:
+        shape = tuple(leaf.shape)
+        start = 0
+        if stacked and shape and shape[0] % d == 0:
+            return P(data_axis)
+        if stacked:
+            start = 1  # never split the block axis unevenly
+        for i in range(start, len(shape)):
+            if shape[i] % d == 0 and shape[i] >= d:
+                return P(*((None,) * i + (data_axis,)))
+        return P()
+
+    return {g.key: jax.tree.map(lambda leaf, s=g.stacked: leaf_spec(s, leaf),
+                                store_shapes[g.key])
+            for g in partition.groups}
+
+
+def store_shardings(partition, store_shapes: dict, mesh,
+                    data_axis: str = "data") -> dict:
+    specs = store_specs(partition, store_shapes, mesh, data_axis)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

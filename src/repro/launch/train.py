@@ -42,9 +42,20 @@ def main():
     ap.add_argument("--moment-residency", default="device",
                     choices=["device", "banked"],
                     help="banked: compact [k]-slot device moment banks over "
-                         "a full store placed per --offload (paper 3.3)")
-    ap.add_argument("--mesh", default=None, choices=[None, "single", "multi"],
-                    help="distributed mesh (requires real devices)")
+                         "a full store placed per --offload (paper 3.3); "
+                         "banked + --offload zero1 shards the store 1/dp "
+                         "over the mesh's data axis and requires --mesh")
+    ap.add_argument("--mesh", default=None,
+                    choices=[None, "single", "multi", "tiny", "data"],
+                    help="run data-parallel (or DP x TP) on a device mesh: "
+                         "batch shards over the data axes, params/moments "
+                         "follow distributed/sharding.py (TP where the "
+                         "model axis is >1, ZeRO-1 moments under --offload "
+                         "zero1). 'single'=(16,16) 'multi'=(2,16,16) "
+                         "'tiny'=(2,4); 'data'=(N,1) over every visible "
+                         "device — the CPU-testable topology "
+                         "(XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N)")
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--eval-every", type=int, default=0)
@@ -75,8 +86,14 @@ def main():
     mesh = None
     batch_axes = ("data",)
     if args.mesh:
-        from repro.launch.mesh import make_production_mesh
-        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+        from repro.launch.mesh import (make_data_mesh, make_mesh,
+                                       make_production_mesh, mesh_config)
+        if args.mesh == "data":
+            mesh = make_data_mesh()
+        elif args.mesh == "tiny":
+            mesh = make_mesh(mesh_config("tiny"))
+        else:
+            mesh = make_production_mesh(multi_pod=args.mesh == "multi")
         batch_axes = tuple(a for a in mesh.axis_names if a != "model")
 
     from repro.train.trainer import Trainer

@@ -46,8 +46,13 @@ class FinetuneMethod(Protocol):
     name: str
 
     def init_state(self, model_cfg: ModelConfig, opt_cfg: OptimizerConfig,
-                   seed: int = 0) -> dict:
+                   seed: int = 0, mesh=None) -> dict:
         """Fresh TrainState pytree (params + optimizer + method state).
+
+        ``mesh`` is forwarded when the trainer runs data-parallel; methods
+        whose state layout depends on the mesh (the banked full store under
+        ``offload == "zero1"`` shards 1/dp over the data axis) use it at
+        init, everything else may ignore it.
 
         For the masked-selection family, ``state["opt"]`` follows
         ``opt_cfg.moment_residency``:
@@ -66,8 +71,13 @@ class FinetuneMethod(Protocol):
 
     def make_step(self, model_cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
                   mesh=None, batch_axes=("data",), use_pallas: bool = False,
-                  donate: bool = True):
-        """-> jitted ``(state, batch) -> (state, metrics)``."""
+                  donate: bool = True, state_shardings=None):
+        """-> jitted ``(state, batch) -> (state, metrics)``.
+
+        ``state_shardings`` (the method's ``state_shardings()`` tree, passed
+        by the trainer when a mesh is active) lets the step pin its state
+        outputs to the input layout so data-parallel steps stay
+        compile-once; methods without sharded state may ignore it."""
         ...
 
     def eval_params(self, model_cfg: ModelConfig, opt_cfg: OptimizerConfig,

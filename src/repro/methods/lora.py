@@ -27,7 +27,9 @@ class LoRAMethod:
 
     # -------------------------------------------------------------- state
     def init_state(self, model_cfg: ModelConfig, opt_cfg: OptimizerConfig,
-                   seed: int = 0) -> dict:
+                   seed: int = 0, mesh=None) -> dict:
+        # mesh accepted per the FinetuneMethod protocol; LoRA state is tiny
+        # (adapters + their moments) and stays replicated under DP
         model = model_registry.get(model_cfg)
         base = model.init(jax.random.PRNGKey(seed), model_cfg)
         lora_p = lora_mod.init_lora(jax.random.PRNGKey(seed + 1), base,
@@ -39,7 +41,7 @@ class LoRAMethod:
     # --------------------------------------------------------------- step
     def make_step(self, model_cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
                   mesh=None, batch_axes=("data",), use_pallas: bool = False,
-                  donate: bool = True):
+                  donate: bool = True, state_shardings=None):
         model = model_registry.get(model_cfg)
         rank, alpha = opt_cfg.lora_rank, opt_cfg.lora_alpha
 

@@ -46,6 +46,20 @@ from repro.optim.schedules import learning_rate
 from repro.train import step as step_mod
 
 
+def _constrain(tree, shardings):
+    """Pin a traced pytree to its sharding tree inside jit (maxtext-style
+    output constraints): GSPMD otherwise *infers* output layouts, and a
+    layout that differs from the input's would make the next step's call
+    signature — and therefore a recompile — depend on the previous step.
+    ``HOST_RESIDENT`` markers (and any non-Sharding entry) pass through."""
+    if shardings is None:
+        return tree
+    return jax.tree.map(
+        lambda x, s: jax.lax.with_sharding_constraint(x, s)
+        if isinstance(s, jax.sharding.Sharding) else x,
+        tree, shardings)
+
+
 @dataclasses.dataclass(frozen=True)
 class SelectionMethod:
     """FinetuneMethod for block-masked fine-tuning under one policy."""
@@ -62,23 +76,101 @@ class SelectionMethod:
                    + len(self.sel_cfg.always_include))
 
     def init_state(self, model_cfg: ModelConfig, opt_cfg: OptimizerConfig,
-                   seed: int = 0) -> dict:
+                   seed: int = 0, mesh=None) -> dict:
         return step_mod.init_train_state(
             model_cfg, seed, moment_dtype=jnp.dtype(opt_cfg.moment_dtype),
             policy=self.sel_cfg.policy,
             select_k=self.slot_capacity(model_cfg),
             moment_residency=opt_cfg.moment_residency,
-            store_policy=opt_cfg.offload)
+            store_policy=opt_cfg.offload, mesh=mesh)
+
+    # ---------------------------------------------------------- sharding
+    def state_shardings(self, model_cfg: ModelConfig,
+                        opt_cfg: OptimizerConfig, state: dict, mesh) -> dict:
+        """Sharding tree congruent with ``init_state``'s TrainState for
+        data-parallel (or DP x TP) training on ``mesh``.
+
+        Params follow ``distributed.sharding.param_specs`` (replicated on a
+        pure-DP mesh, TP-sharded where the model axis is >1). Dense moments
+        follow the params' specs, additionally ZeRO-1-sharded over ``data``
+        under ``offload == "zero1"``. Banked residency keeps the compact
+        [k]-slot banks replicated (they are the working set every device
+        updates) while the full store shards 1/dp over ``data`` under
+        ``offload == "zero1"``. Host-resident leaves (``slot_map``, a
+        ``"host"``-policy store) carry the ``HOST_RESIDENT`` marker instead
+        of a sharding — they are numpy, never device_put.
+        """
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.distributed import sharding as shard_rules
+
+        rep = NamedSharding(mesh, P())
+        replicate = lambda tree: jax.tree.map(lambda _: rep, tree)  # noqa: E731
+        is_spec = lambda x: isinstance(x, P)  # noqa: E731
+        canon = lambda specs: jax.tree.map(  # noqa: E731
+            lambda s: shard_rules.mesh_canonical_spec(s, mesh), specs,
+            is_leaf=is_spec)
+        as_shardings = lambda specs: jax.tree.map(  # noqa: E731
+            lambda s: NamedSharding(mesh, s), specs, is_leaf=is_spec)
+        # canonical specs (no trailing Nones / size-1 axes) so step outputs
+        # pinned with with_sharding_constraint compare equal to the initial
+        # device_put and every compiled phase stays compile-once
+        p_specs = canon(shard_rules.param_specs(model_cfg, state["params"],
+                                                mesh))
+        p_shard = as_shardings(p_specs)
+        out = {"params": p_shard, "sel": replicate(state["sel"]),
+               "step": rep}
+        opt = state["opt"]
+        if opt_cfg.moment_residency == "device":
+            if (opt_cfg.offload == "host"
+                    and offload.host_memory_kind_supported()):
+                # pinned_host memory kinds (TPU/GPU only)
+                m_shard = offload.moment_shardings(
+                    "host", p_specs, mesh, params_shapes=state["params"])
+            else:
+                m_specs = p_specs
+                if opt_cfg.offload == "zero1":
+                    m_specs = canon(shard_rules.apply_zero1(
+                        p_specs, state["params"], mesh))
+                m_shard = as_shardings(m_specs)
+            out["opt"] = {"m": m_shard, "v": m_shard, "counts": rep}
+        else:
+            partition = part_mod.build_partition(model_cfg)
+            opt_sh = {"banks": replicate(opt["banks"]),
+                      "slot_map": shard_rules.HOST_RESIDENT,
+                      "counts": rep}
+            if "store" in opt:
+                if opt_cfg.offload == "host":
+                    opt_sh["store"] = jax.tree.map(
+                        lambda _: shard_rules.HOST_RESIDENT, opt["store"])
+                elif opt_cfg.offload == "zero1":
+                    opt_sh["store"] = as_shardings(canon(
+                        shard_rules.store_specs(partition, opt["store"],
+                                                mesh)))
+                else:
+                    opt_sh["store"] = replicate(opt["store"])
+            out["opt"] = opt_sh
+        return out
 
     # --------------------------------------------------------------- step
     def make_step(self, model_cfg: ModelConfig, opt_cfg: OptimizerConfig, *,
                   mesh=None, batch_axes=("data",), use_pallas: bool = False,
-                  donate: bool = True):
+                  donate: bool = True, state_shardings=None):
         """-> ``(state, batch) -> (state, metrics)``.
 
         Dense residency: one jitted function. Banked residency: a Python
         driver around two jitted phases (exposed as ``.forward_select`` /
         ``.apply`` attributes) with the host-side moment swap in between.
+
+        With ``state_shardings`` (Trainer passes the ``state_shardings()``
+        tree when it runs on a mesh) every compiled phase pins its state
+        outputs to the same layout it consumes, so step N+1 sees exactly the
+        shardings step N produced and each phase keeps the compile-once
+        guarantee under data parallelism. The batch arrives sharded over the
+        data axis; because the loss is a global mean inside one jitted
+        (GSPMD) program, gradients are mean-reduced over ``data`` *before*
+        the in-jit selection — every device sees identical block norms and
+        picks identical blocks by construction.
         """
         sel_cfg = self.sel_cfg
         model = model_registry.get(model_cfg)
@@ -131,7 +223,8 @@ class SelectionMethod:
         if opt_cfg.moment_residency == "banked":
             return self._make_banked_step(
                 opt_cfg, partition, forward_select, step_metrics,
-                use_pallas=use_pallas, donate=donate)
+                use_pallas=use_pallas, donate=donate,
+                state_shardings=state_shardings)
         if opt_cfg.moment_residency != "device":
             raise ValueError(
                 f"unknown moment_residency {opt_cfg.moment_residency!r}")
@@ -145,20 +238,44 @@ class SelectionMethod:
                 mask, lr, use_pallas=use_pallas)
             new_state = {"params": params, "opt": opt, "sel": sel_state,
                          "step": state["step"] + 1}
+            new_state = _constrain(new_state, state_shardings)
             return new_state, step_metrics(metrics, loss, gnorm, lr, mask,
                                            block_norms, state["step"])
 
         return jax.jit(step_fn, donate_argnums=(0,) if donate else ())
 
     def _make_banked_step(self, opt_cfg, partition, forward_select,
-                          step_metrics, *, use_pallas, donate):
-        fwd = jax.jit(forward_select)
+                          step_metrics, *, use_pallas, donate,
+                          state_shardings=None):
+        shd = state_shardings
+
+        def fwd_fn(params, sel_state, batch):
+            out = forward_select(params, sel_state, batch)
+            grads, mask, sel_state, loss, metrics, gnorm, block_norms = out
+            if shd is not None:
+                grads = _constrain(grads, shd["params"])
+                sel_state = _constrain(sel_state, shd["sel"])
+            return grads, mask, sel_state, loss, metrics, gnorm, block_norms
+
+        fwd = jax.jit(fwd_fn)
+
+        # zero1/none stores re-place through their sharding tree after a
+        # checkpoint restore; "host" stores carry markers, not shardings
+        store_sh = None
+        if shd is not None and isinstance(shd["opt"].get("store"), dict):
+            leaves = jax.tree.leaves(shd["opt"]["store"])
+            if leaves and isinstance(leaves[0], jax.sharding.Sharding):
+                store_sh = shd["opt"]["store"]
 
         def apply_fn(params, grads, banks, counts, mask, step):
             lr = learning_rate(opt_cfg, step)
             params, banks, counts = masked_adamw.banked_update(
                 opt_cfg, partition, params, grads, banks, counts, mask, lr,
                 use_pallas=use_pallas)
+            if shd is not None:
+                params = _constrain(params, shd["params"])
+                banks = _constrain(banks, shd["opt"]["banks"])
+                counts = _constrain(counts, shd["opt"]["counts"])
             return params, banks, counts, lr
 
         # params/banks/counts are replaced 1:1 -> donate; grads have no
@@ -179,7 +296,8 @@ class SelectionMethod:
             mask_host = np.zeros((nb,), bool)
             mask_host[idx[idx < nb]] = True
             store = offload.ensure_store_residency(opt["store"],
-                                                   opt_cfg.offload)
+                                                   opt_cfg.offload,
+                                                   shardings=store_sh)
             banks, slot_map, store = masked_adamw.swap_banked(
                 partition, opt["banks"], store, opt["slot_map"], mask_host)
             params, banks, counts, lr = apply(

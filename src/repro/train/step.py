@@ -95,7 +95,8 @@ def init_train_state(model_cfg: ModelConfig, seed: int = 0,
                      policy: str = "adagradselect",
                      select_k: int | None = None,
                      moment_residency: str = "device",
-                     store_policy: str = "host") -> dict:
+                     store_policy: str = "host",
+                     mesh=None) -> dict:
     """TrainState for the masked-selection family: params + masked-AdamW
     moments + the policy's selection-state pytree.
 
@@ -104,25 +105,29 @@ def init_train_state(model_cfg: ModelConfig, seed: int = 0,
     ``moment_residency == "banked"``: ``state["opt"]`` is the compact
     layout ``{"banks", "slot_map", "counts", "store"}`` — [k]-slot device
     moment banks over a full store placed per ``store_policy`` ("host" ->
-    host RAM; see masked_adamw.init_banked_opt_state). ``select_k`` caps
+    host RAM; "zero1" -> device, sharded 1/dp over ``mesh``'s data axis;
+    see masked_adamw.init_banked_opt_state). ``select_k`` caps
     the slot count (and the selection state's static ``indices`` length);
     default: ``num_blocks``."""
     model = registry.get(model_cfg)
     partition = part_mod.build_partition(model_cfg)
     params = model.init(jax.random.PRNGKey(seed), model_cfg)
     if moment_residency == "banked":
-        if store_policy == "zero1":
-            # a replicated device store on top of the banks would be
-            # strictly worse than dense zero1 — reject instead of degrading
+        if store_policy == "zero1" and mesh is None:
+            # an UNSHARDED device store on top of the banks would be
+            # strictly worse than dense zero1 — the sharded layout needs a
+            # mesh to place its 1/dp shards, so reject instead of degrading
             raise ValueError(
-                "moment_residency='banked' does not support offload='zero1' "
-                "(the full store is not ZeRO-sharded yet); use "
+                "moment_residency='banked' with offload='zero1' requires a "
+                "mesh (the full store is sharded 1/dp over the data axis); "
+                "pass Trainer(..., mesh=...) / launch.train --mesh, use "
                 "offload='host' for the paper's host-resident store, or "
                 "moment_residency='device' to keep dense ZeRO-1 moments")
+        store = {"host": "host", "zero1": "zero1"}.get(store_policy, "device")
         k = select_k if select_k is not None else partition.num_blocks
         opt = masked_adamw.init_banked_opt_state(
-            partition, params, k, moment_dtype,
-            store_policy="host" if store_policy == "host" else "device")
+            partition, params, k, moment_dtype, store_policy=store,
+            mesh=mesh)
     elif moment_residency == "device":
         opt = masked_adamw.init_opt_state(partition, params, moment_dtype)
     else:

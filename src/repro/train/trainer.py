@@ -4,8 +4,13 @@ Method-agnostic: the fine-tuning method (full FT, AdaGradSelect and the
 other selection policies, LoRA, ...) is resolved through the
 ``repro.methods`` registry, which supplies the TrainState, the compiled step
 function, and eval/accounting hooks — the trainer never inspects the method
-name. Runs the same code path single-device (tests/examples) and distributed
-(launch/train.py passes a mesh + sharded state). Fault-tolerance contract:
+name. Runs the same code path single-device (tests/examples) and distributed:
+with ``mesh=...`` the trainer shards the batch over the mesh's batch axes
+(global_batch must divide the dp degree), places the TrainState per the
+method's ``state_shardings()`` tree (params/moments sharded or replicated,
+HOST_RESIDENT leaves left in host RAM), and hands the sharding tree to
+``make_step`` so compiled steps pin their outputs to the same layout
+(compile-once under data parallelism). Fault-tolerance contract:
   * `checkpoint_every` saves are async + atomic, include the full TrainState
     (method state included) and the data cursor IS the step counter;
   * on start, `maybe_restore()` resumes from the latest checkpoint;
@@ -43,6 +48,15 @@ class TrainLog:
     metrics: list = field(default_factory=list)
 
 
+def _place_state(state, shardings):
+    """device_put every leaf onto its sharding; HOST_RESIDENT markers (the
+    banked slot_map / "host"-policy store) stay numpy in host RAM."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s)
+        if isinstance(s, jax.sharding.Sharding) else x,
+        state, shardings)
+
+
 class Trainer:
     def __init__(self, tcfg: TrainConfig, *, mesh=None, batch_axes=("data",),
                  method: str | None = None, data_source=None,
@@ -55,11 +69,38 @@ class Trainer:
         self.batch_shardings = batch_shardings
         self._watchdog_active = on_straggler is not None
         self.on_straggler = on_straggler or (lambda step, dt, ewma: None)
+        init_kw = {"mesh": mesh} if mesh is not None else {}
         self.state = self.method.init_state(tcfg.model, tcfg.optimizer,
-                                            tcfg.seed)
+                                            tcfg.seed, **init_kw)
+
+        # -- data-parallel placement: shard/replicate the TrainState per the
+        # method's sharding tree and shard the batch over the mesh's batch
+        # axes. The same code path runs single-device when mesh is None.
+        self.state_shardings = None
+        step_kw = {}
+        if mesh is not None and hasattr(self.method, "state_shardings"):
+            self.state_shardings = self.method.state_shardings(
+                tcfg.model, tcfg.optimizer, self.state, mesh)
+            self.state = _place_state(self.state, self.state_shardings)
+            step_kw["state_shardings"] = self.state_shardings
+        if mesh is not None and batch_shardings is None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            baxes = tuple(a for a in batch_axes if a in mesh.axis_names)
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            dp = 1
+            for a in baxes:
+                dp *= sizes[a]
+            if tcfg.global_batch % max(1, dp):
+                raise ValueError(
+                    f"global_batch={tcfg.global_batch} must be divisible by "
+                    f"the data-parallel degree {dp} (mesh axes {baxes})")
+            self._batch_sharding = NamedSharding(mesh, P(baxes))
+        else:
+            self._batch_sharding = None
+
         self.step_fn = self.method.make_step(
             tcfg.model, tcfg.optimizer, mesh=mesh, batch_axes=batch_axes,
-            use_pallas=use_pallas)
+            use_pallas=use_pallas, **step_kw)
         self.data = data_source or data_loader.make_source(
             "synthetic_math", seq_len=tcfg.seq_len,
             global_batch=tcfg.global_batch, seed=tcfg.seed)
@@ -72,13 +113,19 @@ class Trainer:
     def maybe_restore(self) -> int:
         if self.ckpt is None or self.ckpt.latest_step() is None:
             return 0
-        self.state, step = self.ckpt.restore(self.state)
+        # shardings re-place restored (numpy) leaves onto the current mesh —
+        # the sharded-store round-trip and elastic resharding both land here
+        self.state, step = self.ckpt.restore(
+            self.state, shardings=self.state_shardings)
         return step
 
     # ------------------------------------------------------------- loop
     def _device_batch(self, batch: dict):
         if self.batch_shardings is not None:
             return jax.tree.map(jax.device_put, batch, self.batch_shardings)
+        if self._batch_sharding is not None:
+            return jax.tree.map(
+                lambda x: jax.device_put(x, self._batch_sharding), batch)
         return batch
 
     def train(self, steps: int | None = None, start_step: int | None = None):

@@ -248,11 +248,13 @@ def test_banked_resident_bytes_under_half_of_full():
     assert banked["host"] > 0  # the full store lives in host RAM
 
 
-def test_banked_rejects_zero1_store():
-    """An unsharded device store on top of the banks would be strictly
-    worse than dense ZeRO-1 — rejected instead of silently degrading."""
+def test_banked_rejects_zero1_store_without_mesh():
+    """Without a mesh there is nothing to shard the store over — an
+    unsharded device store on top of the banks would be strictly worse than
+    dense ZeRO-1, so init still rejects (with the mesh hint). With a mesh
+    the store shards 1/dp instead: tests/test_sharded_train.py."""
     from repro.train import step as step_mod
-    with pytest.raises(ValueError, match="zero1"):
+    with pytest.raises(ValueError, match="zero1.*mesh|mesh.*zero1"):
         step_mod.init_train_state(TINY, moment_residency="banked",
                                   store_policy="zero1")
 

@@ -166,19 +166,18 @@ def test_elastic_restore_across_device_counts(multidevice):
     the restart-based elasticity path."""
     out = multidevice("""
 import jax, jax.numpy as jnp, numpy as np, tempfile
-from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint.manager import CheckpointManager
 from repro.distributed.elastic import reshard_state, validate_rescale
 
 d = tempfile.mkdtemp()
-mesh1 = jax.make_mesh((2, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2,
-                      devices=jax.devices()[:4])
+mesh1 = jax.make_mesh((2, 2), ("data", "model"), devices=jax.devices()[:4])
 w = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
 state = {"w": jax.device_put(w, NamedSharding(mesh1, P("data", "model")))}
 mgr = CheckpointManager(d, async_save=False)
 mgr.save(5, state)
 
-mesh2 = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh2 = jax.make_mesh((4, 2), ("data", "model"))
 sh2 = {"w": NamedSharding(mesh2, P("data", "model"))}
 restored, step = mgr.restore({"w": jnp.zeros((8, 8))}, shardings=sh2)
 np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(w))

@@ -45,8 +45,9 @@ def test_ep_matches_dense_singledevice():
     cfg = _cfg(moe_impl="ep")
     params = moe.init(jax.random.PRNGKey(0), cfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 32))
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.configs.base import MeshConfig
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh(MeshConfig((1, 1), ("data", "model")))
     y_ep, _ = jax.jit(lambda p, xx: moe.apply_ep(p, cfg, xx, mesh))(params, x)
     y_d, _ = moe.apply_dense(params, cfg, x)
     np.testing.assert_allclose(np.asarray(y_ep), np.asarray(y_d), atol=1e-5)
@@ -55,8 +56,8 @@ def test_ep_matches_dense_singledevice():
 def test_ep_multidevice_fwd_grad(multidevice):
     out = multidevice("""
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType
-from repro.configs.base import ModelConfig
+from repro.configs.base import MeshConfig, ModelConfig
+from repro.launch.mesh import make_mesh
 from repro.models.layers import moe
 cfg = ModelConfig(name="t", family="moe", d_model=32, num_experts=16,
                   num_experts_per_tok=2, moe_d_ff=16, num_shared_experts=1,
@@ -64,7 +65,7 @@ cfg = ModelConfig(name="t", family="moe", d_model=32, num_experts=16,
                   num_kv_heads=4, moe_impl="ep", ep_axes=("model","data"))
 params = moe.init(jax.random.PRNGKey(0), cfg)
 x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 32), jnp.float32)
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh(MeshConfig((2, 4), ("data", "model")))
 y_d, _ = moe.apply_dense(params, cfg, x)
 y_e, _ = jax.jit(lambda p, xx: moe.apply_ep(p, cfg, xx, mesh))(params, x)
 err = float(jnp.max(jnp.abs(y_d - y_e)))
@@ -90,8 +91,9 @@ def test_capacity_drop_behavior():
     cfg = _cfg(moe_impl="ep", capacity_factor=1e-9)
     params = moe.init(jax.random.PRNGKey(0), cfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 32))
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.configs.base import MeshConfig
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh(MeshConfig((1, 1), ("data", "model")))
     y, _ = jax.jit(lambda p, xx: moe.apply_ep(p, cfg, xx, mesh))(params, x)
     shared_only = moe._shared_ffn(cfg, params["shared"], x.reshape(-1, 32))
     diff = np.abs(np.asarray(y.reshape(-1, 32)) - np.asarray(shared_only))
