@@ -1,0 +1,121 @@
+"""Data-pipeline efficiency: packing tokens-kept ratio + prefetch steps/s.
+
+Two trajectory metrics (consolidated into BENCH_ci.json by benchmarks/run.py
+and guarded by benchmarks/diff_baseline.py):
+
+* ``packed_kept`` — fraction of a variable-length SFT corpus' completion
+  tokens that train correctly supervised under greedy segment packing,
+  vs ``drop_remainder_kept`` (the legacy concat/reshape layout: remainder
+  dropped, boundary-straddling examples corrupted) and ``unpacked_kept``
+  (per-example padded rows). Deterministic — any change is a packer change.
+* ``prefetch_on_vs_off`` — steps/s of the packed pipeline with the async
+  prefetcher (depth 2) as a multiple of the synchronous loop, same model
+  same corpus. A ratio of two timings on one runner, so CI noise largely
+  cancels; << 1 means the prefetch thread started hurting the step loop.
+
+Run directly (``python -m benchmarks.bench_data``) or via benchmarks/run.py.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.configs.base import (ModelConfig, OptimizerConfig, SelectConfig,
+                                TrainConfig)
+from repro.data import loader
+from repro.data.pipeline import JsonlSftRecords, packing
+from repro.data.tokenizer import VOCAB_SIZE
+from repro.train.trainer import Trainer
+
+SEQ_LEN = 256
+BATCH = 4
+
+DATA_MODEL = ModelConfig(
+    name="bench-data", family="dense", num_layers=4, d_model=64,
+    num_heads=4, num_kv_heads=2, head_dim=16, d_ff=256,
+    vocab_size=VOCAB_SIZE, dtype="float32", remat="none")
+
+# last collected table (read by benchmarks/run.py --json)
+LAST_TABLE: dict | None = None
+
+
+def _write_corpus(path: str, n: int = 60, seed: int = 7):
+    """Deterministic variable-length prompt/completion corpus."""
+    rng = np.random.default_rng(seed)
+    with open(path, "w") as f:
+        for _ in range(n):
+            p = "Q: " + " ".join(str(rng.integers(1000))
+                                 for _ in range(int(rng.integers(3, 20))))
+            c = "A: " + " ".join(str(rng.integers(1000))
+                                 for _ in range(int(rng.integers(4, 40))))
+            f.write(json.dumps({"prompt": p, "completion": c}) + "\n")
+
+
+def _tcfg(steps: int) -> TrainConfig:
+    return TrainConfig(
+        model=DATA_MODEL, method="adagradselect",
+        select=SelectConfig(k_percent=33, steps_per_epoch=max(1, steps // 3)),
+        optimizer=OptimizerConfig(lr=1e-3, schedule="constant",
+                                  warmup_steps=0, total_steps=steps),
+        seq_len=SEQ_LEN, global_batch=BATCH, steps=steps, log_every=0)
+
+
+def _steps_per_s(path: str, steps: int, depth: int) -> float:
+    pipe = loader.make_source("jsonl_sft", seq_len=SEQ_LEN,
+                              global_batch=BATCH, path=path)
+    tr = Trainer(_tcfg(steps), data_source=pipe, prefetch_depth=depth)
+    tr.train(steps=2)  # compile + warm the pipeline
+    t0 = time.perf_counter()
+    tr.train(steps=steps, start_step=2)
+    return steps / (time.perf_counter() - t0)
+
+
+def run(steps: int | None = None) -> list:
+    global LAST_TABLE
+    steps = steps or int(os.environ.get("REPRO_BENCH_STEPS", "30"))
+    rows = []
+
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "sft.jsonl")
+        _write_corpus(path)
+
+        stats = packing.packing_stats(JsonlSftRecords(path), SEQ_LEN, BATCH)
+        rows.append(("data/packed_kept", 0.0,
+                     f"{stats['packed_kept']:.4f}"))
+        rows.append(("data/drop_remainder_kept", 0.0,
+                     f"{stats['drop_remainder_kept']:.4f}"))
+        rows.append(("data/packed_slot_util", 0.0,
+                     f"{stats['packed_slot_util']:.4f}"))
+        rows.append(("data/unpacked_slot_util", 0.0,
+                     f"{stats['unpacked_slot_util']:.4f}"))
+
+        off = _steps_per_s(path, steps, depth=0)
+        on = _steps_per_s(path, steps, depth=2)
+        rows.append(("data/prefetch_off", 1e6 / off, f"{off:.2f} steps/s"))
+        rows.append(("data/prefetch_on", 1e6 / on, f"{on:.2f} steps/s"))
+        rows.append(("data/prefetch_on_vs_off", 0.0, f"{on / off:.3f}x"))
+
+    LAST_TABLE = {
+        **{k: stats[k] for k in ("packed_kept", "drop_remainder_kept",
+                                 "unpacked_kept", "packed_slot_util",
+                                 "unpacked_slot_util")},
+        "prefetch_off_steps_per_s": off,
+        "prefetch_on_steps_per_s": on,
+        "prefetch_on_vs_off": on / off,
+    }
+    return rows
+
+
+def main():
+    rows = run()
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    print(json.dumps(LAST_TABLE, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,16 @@ Key metrics (direction-aware, default tolerance 20%):
     serve engine's tok/s (goodput) as a multiple of the legacy static-batch
     loop (serve table; higher is better). Ratios of two timings on the same
     runner, so CI noise largely cancels.
+  * ``data_packed_kept`` — correctly-supervised completion-token fraction
+    under greedy segment packing (data table; higher is better).
+    Deterministic: any drop means the packer regressed.
+  * ``data_prefetch_on_vs_off`` — packed-pipeline steps/s with the async
+    prefetcher as a multiple of the synchronous loop (data table; higher is
+    better; a timing ratio, noise cancels). The baseline is capped at 1.0
+    before comparing: the guard is "prefetch must never make training >20%
+    slower than the synchronous loop", not "reproduce the speedup an
+    unloaded runner happened to measure" — on a saturated CI box the
+    prefetch thread can legitimately win nothing.
 
 Usage:  python -m benchmarks.diff_baseline BENCH_ci.json BENCH_baseline.json
 Exit codes: 0 ok, 1 regression, 2 missing metric/file.
@@ -20,7 +30,9 @@ import argparse
 import json
 import sys
 
-# (name, extractor, direction) — direction +1: higher is better, -1: lower
+# (name, extractor, direction, baseline_cap) — direction +1: higher is
+# better, -1: lower; baseline_cap (optional) bounds the committed baseline
+# before comparison, for metrics whose headroom is machine-dependent
 _MEM_ROW = "adagradselect_banked"
 
 
@@ -34,20 +46,26 @@ def _mem_ratio(payload: dict):
 
 
 KEY_METRICS = (
-    ("banked_device_vs_full", _mem_ratio, -1),
+    ("banked_device_vs_full", _mem_ratio, -1, None),
     ("uniform_engine_vs_legacy",
      lambda p: (p.get("serve_table") or {}).get("uniform_engine_vs_legacy"),
-     +1),
+     +1, None),
     ("staggered_engine_vs_legacy",
      lambda p: (p.get("serve_table") or {}).get("staggered_engine_vs_legacy"),
-     +1),
+     +1, None),
+    ("data_packed_kept",
+     lambda p: (p.get("data_table") or {}).get("packed_kept"),
+     +1, None),
+    ("data_prefetch_on_vs_off",
+     lambda p: (p.get("data_table") or {}).get("prefetch_on_vs_off"),
+     +1, 1.0),
 )
 
 
 def diff(current: dict, baseline: dict, tolerance: float = 0.20) -> list[str]:
     """-> list of human-readable regression messages (empty = pass)."""
     failures = []
-    for name, extract, direction in KEY_METRICS:
+    for name, extract, direction, base_cap in KEY_METRICS:
         cur, base = extract(current), extract(baseline)
         if base is None:
             continue  # metric not in the committed baseline yet
@@ -55,6 +73,8 @@ def diff(current: dict, baseline: dict, tolerance: float = 0.20) -> list[str]:
             failures.append(f"{name}: missing from current run "
                             f"(baseline {base:.4f})")
             continue
+        if base_cap is not None:
+            base = min(base, base_cap)
         if direction > 0:
             regressed = cur < base * (1.0 - tolerance)
             verdict = f"{cur:.4f} < {base:.4f} * {1 - tolerance:.2f}"

@@ -28,9 +28,9 @@ def main(argv=None) -> None:
     steps = int(os.environ.get("REPRO_BENCH_STEPS", "150"))
     rows = []
 
-    from benchmarks import (bench_fig1, bench_fig3, bench_fig4, bench_kernels,
-                            bench_memory, bench_serve, bench_table1,
-                            roofline_table)
+    from benchmarks import (bench_data, bench_fig1, bench_fig3, bench_fig4,
+                            bench_kernels, bench_memory, bench_serve,
+                            bench_table1, roofline_table)
 
     suite = (
         ("kernels", bench_kernels, {}),
@@ -40,6 +40,7 @@ def main(argv=None) -> None:
         ("fig4", bench_fig4, {"steps": steps}),
         ("memory", bench_memory, {"steps": max(10, steps // 5)}),
         ("serve", bench_serve, {}),
+        ("data", bench_data, {"steps": max(6, steps // 5)}),
         ("roofline", roofline_table, {}),
     )
     only = ({s.strip() for s in args.only.split(",") if s.strip()}
@@ -69,6 +70,7 @@ def main(argv=None) -> None:
                      for n, us, d in rows],
             "memory_table": bench_memory.LAST_TABLE,
             "serve_table": bench_serve.LAST_TABLE,
+            "data_table": bench_data.LAST_TABLE,
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

@@ -1,0 +1,91 @@
+"""SFT on a real prompt/completion corpus through the streaming pipeline:
+segment-aware packing, async device prefetch, cursor-exact resume.
+
+  PYTHONPATH=src python examples/finetune_sft.py            (~1 min CPU)
+
+The ``jsonl_sft`` record schema is one JSON object per line:
+
+    {"prompt": "Q: What is 17 + 25?\\n", "completion": "A: 42"}
+
+* ``prompt`` is context: byte-tokenized with a leading BOS, loss-masked 0.
+* ``completion`` is supervised: loss-masked 1, terminated with EOS.
+
+The packer places several records per [B, L] row (segment_ids 1..n, 0 for
+padding; positions restart at each segment) and the model attends
+block-diagonally — the packed loss is exactly the per-example loss, but a
+variable-length corpus wastes far fewer token slots than one-example-per-row
+padding (and, unlike the legacy concat/reshape layout, never trains across
+example boundaries or on prompts). ``prefetch_depth > 0`` builds and
+device_puts batches on a background thread; the trajectory is bit-identical
+with prefetch on or off. The data cursor rides along in checkpoints, so an
+interrupted run resumes the record stream with no skipped/repeated examples.
+"""
+import json
+import os
+import tempfile
+
+import numpy as np
+
+from repro.configs.base import (ModelConfig, OptimizerConfig, SelectConfig,
+                                TrainConfig)
+from repro.data import loader
+from repro.data.pipeline import JsonlSftRecords, packing
+from repro.data.tokenizer import VOCAB_SIZE
+from repro.train.trainer import Trainer
+
+MODEL = ModelConfig(
+    name="sft-demo", family="dense", num_layers=4, d_model=128, num_heads=4,
+    num_kv_heads=2, head_dim=32, d_ff=512, vocab_size=VOCAB_SIZE,
+    dtype="float32", remat="none", tie_embeddings=True)
+
+SEQ_LEN, BATCH, STEPS = 256, 8, 60
+
+
+def write_demo_corpus(path: str, n: int = 200, seed: int = 0):
+    """Arithmetic word problems as {"prompt", "completion"} lines."""
+    rng = np.random.default_rng(seed)
+    with open(path, "w") as f:
+        for _ in range(n):
+            a, b = int(rng.integers(10, 500)), int(rng.integers(10, 500))
+            f.write(json.dumps({
+                "prompt": f"Q: What is {a} + {b}?\n",
+                "completion": f"A: {a + b}",
+            }) + "\n")
+
+
+def main():
+    workdir = tempfile.mkdtemp(prefix="sft_demo_")
+    corpus = os.path.join(workdir, "train.jsonl")
+    write_demo_corpus(corpus)
+
+    stats = packing.packing_stats(JsonlSftRecords(corpus), SEQ_LEN, BATCH)
+    print(f"corpus: {stats['num_records']} records, "
+          f"{stats['corpus_tokens']} tokens | packed slot util "
+          f"{stats['packed_slot_util']:.0%} vs unpacked "
+          f"{stats['unpacked_slot_util']:.0%} | supervised-token retention: "
+          f"packed {stats['packed_kept']:.0%}, legacy drop-remainder "
+          f"{stats['drop_remainder_kept']:.0%}")
+
+    tcfg = TrainConfig(
+        model=MODEL, method="adagradselect",
+        select=SelectConfig(k_percent=30, steps_per_epoch=STEPS // 3),
+        optimizer=OptimizerConfig(lr=3e-3, schedule="cosine",
+                                  warmup_steps=10, total_steps=STEPS),
+        seq_len=SEQ_LEN, global_batch=BATCH, steps=STEPS,
+        log_every=STEPS // 4,
+        checkpoint_dir=os.path.join(workdir, "ckpt"),
+        checkpoint_every=STEPS // 2)
+
+    pipe = loader.make_source("jsonl_sft", seq_len=SEQ_LEN,
+                              global_batch=BATCH, path=corpus)
+    trainer = Trainer(tcfg, data_source=pipe, prefetch_depth=2)
+    start = trainer.maybe_restore()
+    log = trainer.train(steps=STEPS - start, start_step=start)
+    print(f"loss {log.losses[0]:.3f} -> {log.losses[-1]:.3f} | "
+          f"mean step {np.mean(log.step_times[3:]) * 1e3:.0f} ms | "
+          f"data cursor {pipe.cursor()} (saved in checkpoint meta — rerun "
+          f"with the same workdir to resume the stream exactly)")
+
+
+if __name__ == "__main__":
+    main()

@@ -130,6 +130,17 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def load_meta(self, step: int | None = None) -> dict:
+        """The meta.json saved next to a step's shards (save()'s
+        ``extra_meta`` lands here — e.g. the trainer's data-pipeline cursor,
+        which must resume alongside the TrainState)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:08d}", "meta.json")
+        with open(path) as f:
+            return json.load(f)
+
     def restore(self, target, step: int | None = None, shardings=None):
         """``target``: pytree of arrays or ShapeDtypeStructs defining the
         structure/shapes. ``shardings``: optional matching pytree — this is

@@ -10,6 +10,11 @@ the launcher device_puts them with the batch sharding (single-controller).
 On multi-host deployments each process feeds its addressable slice via
 ``host_local_slice`` — the global batch layout (and hence training) is
 identical either way, and resume-after-restart needs only the step counter.
+
+Streaming SFT corpora (variable-length prompt/completion records, packed
+with segment ids, prefetched) live in ``repro.data.pipeline``;
+``make_source("jsonl_sft" | "packed_math", ...)`` builds one behind the same
+trainer seam.
 """
 from __future__ import annotations
 
@@ -52,7 +57,15 @@ class JsonlSource:
                     continue
                 text = json.loads(line).get("text", "")
                 stream.extend(tok.encode(text).tolist())
-        n = max(1, len(stream) // self.seq_len)
+        if not stream:
+            raise ValueError(
+                f"{self.path}: no tokens — the corpus is empty (need at "
+                f"least 1 token; {self.seq_len} fill one row)")
+        if len(stream) < self.seq_len:
+            # shorter than one row: pad the tail instead of crashing in the
+            # reshape below (PAD rows are loss-masked out in batch_at)
+            stream = stream + [tok.PAD] * (self.seq_len - len(stream))
+        n = len(stream) // self.seq_len
         arr = np.asarray(stream[: n * self.seq_len], np.int32)
         self.rows = arr.reshape(n, self.seq_len)
 
@@ -65,7 +78,17 @@ class JsonlSource:
 
 
 def host_local_slice(batch: dict, process_index: int, process_count: int) -> dict:
-    """Slice a global batch to this host's rows (multi-host data feeding)."""
+    """Slice a global batch to this host's rows (multi-host data feeding).
+    The batch dimension must divide evenly — silently dropping trailing
+    rows would make the global batch layout depend on process_count."""
+    sizes = {k: v.shape[0] for k, v in batch.items()}
+    bad = {k: b for k, b in sizes.items() if b % process_count}
+    if bad:
+        raise ValueError(
+            f"host_local_slice: batch dim must be divisible by "
+            f"process_count={process_count}, got {bad} — pad or resize the "
+            f"global batch so every host feeds the same number of rows")
+
     def sl(x):
         per = x.shape[0] // process_count
         return x[process_index * per:(process_index + 1) * per]
@@ -73,11 +96,28 @@ def host_local_slice(batch: dict, process_index: int, process_count: int) -> dic
 
 
 def make_source(kind: str, *, seq_len: int, global_batch: int, seed: int = 1234,
-                path: str = "", digits: int = 3):
+                path: str = "", digits: int = 3, pack: bool = True,
+                num_records: int = 4096):
+    """``synthetic_math`` / ``jsonl`` are the legacy pure-f(step) sources;
+    ``jsonl_sft`` (prompt/completion lines) and ``packed_math`` (the
+    synthetic corpus as variable-length records) return a streaming
+    ``data.pipeline.SFTPipeline`` (packed unless ``pack=False``) whose
+    cursor rides along in checkpoints."""
     if kind == "synthetic_math":
         return SyntheticMathSource(
             synthetic.MathTaskConfig(digits=digits, seq_len=seq_len, seed=seed),
             global_batch)
     if kind == "jsonl":
         return JsonlSource(path, seq_len, global_batch)
+    if kind in ("jsonl_sft", "packed_math"):
+        from repro.data import pipeline as pipe
+        if kind == "jsonl_sft":
+            source = pipe.JsonlSftRecords(path)
+        else:
+            source = pipe.SyntheticMathRecords(
+                synthetic.MathTaskConfig(digits=digits, seq_len=seq_len,
+                                         seed=seed),
+                num_records=num_records)
+        return pipe.SFTPipeline(source, seq_len=seq_len,
+                                global_batch=global_batch, pack=pack)
     raise ValueError(kind)

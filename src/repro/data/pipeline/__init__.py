@@ -1,0 +1,100 @@
+"""Streaming SFT input pipeline: records -> packed [B, L] batches -> device.
+
+The subsystem has three stages, each separately testable:
+
+  records.py   RecordSource — variable-length prompt/completion records with
+               deterministic random access (cursor = one integer)
+  packing.py   greedy segment-aware packer (tokens / loss_mask /
+               segment_ids / positions), pure in the cursor
+  prefetch.py  background-thread batch build + device_put, ``depth`` ahead
+
+``SFTPipeline`` ties them together behind the iterator seam the Trainer
+consumes: ``batches()`` yields ``(host_batch, cursor_after)`` pairs computed
+from a LOCAL copy of the cursor — generators (and the prefetcher running
+them ahead) never mutate pipeline state, so read-ahead can overshoot freely.
+The trainer commits consumption back via ``restore_cursor`` with the cursor
+of the last batch it actually used; the same dict rides along checkpoints
+(CheckpointManager meta) so a restored run resumes the record stream with no
+skipped or repeated records.
+
+Legacy ``batch_at(step)`` sources keep working: the trainer wraps them in
+``StepIndexedAdapter`` (cursor IS the step counter, as before).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.data.pipeline import packing, records
+from repro.data.pipeline.prefetch import Prefetcher
+from repro.data.pipeline.records import (JsonlSftRecords, Record,
+                                         RecordSource, SyntheticMathRecords)
+
+__all__ = [
+    "JsonlSftRecords", "Prefetcher", "Record", "RecordSource",
+    "SFTPipeline", "StepIndexedAdapter", "SyntheticMathRecords",
+    "packing", "records",
+]
+
+
+@dataclass
+class SFTPipeline:
+    """Streaming packed-batch producer over a RecordSource.
+
+    ``pack=True``: greedy multi-segment packing (block-diagonal attention —
+    the model consumes segment_ids/positions). ``pack=False``: one record
+    per row, padded — the unpacked oracle layout with the same batch keys.
+    """
+
+    source: RecordSource
+    seq_len: int
+    global_batch: int
+    pack: bool = True
+    _cursor: int = field(default=0, init=False)
+
+    # ------------------------------------------------------------ stream
+    def build(self, cursor: int) -> tuple[dict, int]:
+        """One batch from ``cursor`` — pure, the resume/prefetch primitive."""
+        fn = packing.pack_batch if self.pack else packing.unpacked_batch
+        return fn(self.source, cursor, self.global_batch, self.seq_len)
+
+    def batches(self, steps: int | None = None):
+        """Yield ``(host_batch, cursor_after)`` from the current committed
+        cursor. Iterates a LOCAL cursor — pipeline state is only advanced by
+        ``restore_cursor`` (the trainer commits what it consumed), so a
+        prefetcher running this generator ``depth`` ahead is harmless."""
+        local = self._cursor
+        produced = 0
+        while steps is None or produced < steps:
+            batch, local = self.build(local)
+            yield batch, {"record": local}
+            produced += 1
+
+    # ------------------------------------------------------------ cursor
+    def cursor(self) -> dict:
+        """Serializable stream position (checkpoint meta)."""
+        return {"record": self._cursor}
+
+    def restore_cursor(self, cursor: dict):
+        self._cursor = int(cursor["record"])
+
+
+@dataclass
+class StepIndexedAdapter:
+    """Iterator seam over a legacy pure-``f(step)`` source (SyntheticMath /
+    Jsonl ring sources): the cursor is the step counter, exactly the
+    pre-pipeline resume contract."""
+
+    source: object  # anything with batch_at(step) -> dict
+    start_step: int = 0
+
+    def batches(self, steps: int | None = None):
+        step = self.start_step
+        while steps is None or step < self.start_step + steps:
+            yield self.source.batch_at(step), {"step": step + 1}
+            step += 1
+
+    def cursor(self) -> dict:
+        return {"step": self.start_step}
+
+    def restore_cursor(self, cursor: dict):
+        self.start_step = int(cursor.get("step", self.start_step))

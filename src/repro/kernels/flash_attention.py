@@ -30,8 +30,12 @@ NEG_INF = -1e30
 # ----------------------------------------------------------------- forward
 
 
-def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, bq, bk, scale,
-                causal):
+def _fwd_kernel(q_ref, k_ref, v_ref, *rest, bq, bk, scale,
+                causal, segmented=False):
+    if segmented:
+        qseg_ref, kseg_ref, o_ref, lse_ref = rest
+    else:
+        o_ref, lse_ref = rest
     qi = pl.program_id(1)
     q = q_ref[0].astype(jnp.float32) * scale          # [BQ, D]
     d = q.shape[-1]
@@ -46,8 +50,18 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, bq, bk, scale,
             qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
             kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
             s = jnp.where(qpos >= kpos, s, NEG_INF)
+        if segmented:
+            qs = qseg_ref[0]                                      # [BQ] f32
+            ks = kseg_ref[0, pl.ds(j * bk, bk)]                   # [BK] f32
+            s = jnp.where(qs[:, None] == ks[None, :], s, NEG_INF)
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
         p = jnp.exp(s - m_new[:, None])
+        if segmented:
+            # a k block can be FULLY masked for a row (cross-segment), so
+            # m_new may still be NEG_INF and exp(s - m_new) would be 1 —
+            # zero masked entries explicitly (a no-op when m_new is real:
+            # exp(NEG_INF - m_new) already underflows to 0)
+            p = jnp.where(s > 0.5 * NEG_INF, p, 0.0)
         alpha = jnp.exp(m_prev - m_new)
         l_new = l_prev * alpha + jnp.sum(p, axis=1)
         acc = acc * alpha[:, None] + p @ v
@@ -64,34 +78,48 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, bq, bk, scale,
     lse_ref[0] = (m + jnp.log(lsum)).astype(jnp.float32)
 
 
-def flash_attention_fwd(q, k, v, *, bq=DEFAULT_BQ, bk=DEFAULT_BK,
-                        causal=True, interpret=True):
-    """q,k,v: [BH, S, D] -> (o [BH, S, D], lse [BH, S])."""
+def flash_attention_fwd(q, k, v, q_seg=None, k_seg=None, *, bq=DEFAULT_BQ,
+                        bk=DEFAULT_BK, causal=True, interpret=True):
+    """q,k,v: [BH, S, D] -> (o [BH, S, D], lse [BH, S]).
+    q_seg/k_seg: optional [BH, S] f32 packed segment ids (block-diagonal
+    attention; both or neither)."""
     bh, s, d = q.shape
     assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    segmented = q_seg is not None
     scale = d ** -0.5
-    kern = partial(_fwd_kernel, bq=bq, bk=bk, scale=scale, causal=causal)
+    kern = partial(_fwd_kernel, bq=bq, bk=bk, scale=scale, causal=causal,
+                   segmented=segmented)
+    in_specs = [
+        pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+        pl.BlockSpec((1, s, d), lambda b, i: (b, 0, 0)),
+        pl.BlockSpec((1, s, d), lambda b, i: (b, 0, 0)),
+    ]
+    args = [q, k, v]
+    if segmented:
+        in_specs += [pl.BlockSpec((1, bq), lambda b, i: (b, i)),
+                     pl.BlockSpec((1, s), lambda b, i: (b, 0))]
+        args += [q_seg.astype(jnp.float32), k_seg.astype(jnp.float32)]
     return pl.pallas_call(
         kern,
         grid=(bh, s // bq),
-        in_specs=[
-            pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
-            pl.BlockSpec((1, s, d), lambda b, i: (b, 0, 0)),
-            pl.BlockSpec((1, s, d), lambda b, i: (b, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=(pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
                    pl.BlockSpec((1, bq), lambda b, i: (b, i))),
         out_shape=(jax.ShapeDtypeStruct((bh, s, d), q.dtype),
                    jax.ShapeDtypeStruct((bh, s), jnp.float32)),
         interpret=interpret,
-    )(q, k, v)
+    )(*args)
 
 
 # ----------------------------------------------------------------- backward
 
 
-def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
-                   *, bq, bk, scale, causal):
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, *rest,
+                   bq, bk, scale, causal, segmented=False):
+    if segmented:
+        qseg_ref, kseg_ref, dq_ref = rest
+    else:
+        (dq_ref,) = rest
     qi = pl.program_id(1)
     q = q_ref[0].astype(jnp.float32)                   # [BQ, D]
     do = do_ref[0].astype(jnp.float32)
@@ -108,6 +136,10 @@ def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
             qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
             kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
             s = jnp.where(qpos >= kpos, s, NEG_INF)
+        if segmented:
+            qs = qseg_ref[0]
+            ks = kseg_ref[0, pl.ds(j * bk, bk)]
+            s = jnp.where(qs[:, None] == ks[None, :], s, NEG_INF)
         p = jnp.exp(s - lse[:, None])                  # [BQ, BK]
         dp = do @ v.T
         ds = p * (dp - delta[:, None]) * scale
@@ -120,7 +152,11 @@ def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
 
 
 def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
-                    dk_ref, dv_ref, *, bq, bk, scale, causal):
+                    *rest, bq, bk, scale, causal, segmented=False):
+    if segmented:
+        qseg_ref, kseg_ref, dk_ref, dv_ref = rest
+    else:
+        dk_ref, dv_ref = rest
     ki = pl.program_id(1)
     k = k_ref[0].astype(jnp.float32)                   # [BK, D]
     v = v_ref[0].astype(jnp.float32)
@@ -138,6 +174,10 @@ def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
             qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
             kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
             s = jnp.where(qpos >= kpos, s, NEG_INF)
+        if segmented:
+            qs = qseg_ref[0, pl.ds(i * bq, bq)]
+            ks = kseg_ref[0]
+            s = jnp.where(qs[:, None] == ks[None, :], s, NEG_INF)
         p = jnp.exp(s - lse[:, None])
         dv = dv + p.T @ do
         dp = do @ v.T
@@ -152,13 +192,24 @@ def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
     dv_ref[0] = dv.astype(dv_ref.dtype)
 
 
-def flash_attention_bwd(q, k, v, o, lse, do, *, bq=DEFAULT_BQ, bk=DEFAULT_BK,
-                        causal=True, interpret=True):
+def flash_attention_bwd(q, k, v, o, lse, do, q_seg=None, k_seg=None, *,
+                        bq=DEFAULT_BQ, bk=DEFAULT_BK, causal=True,
+                        interpret=True):
     bh, s, d = q.shape
+    segmented = q_seg is not None
     delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
     scale = d ** -0.5
+    seg_args = ()
+    dq_seg_specs, dkv_seg_specs = [], []
+    if segmented:
+        seg_args = (q_seg.astype(jnp.float32), k_seg.astype(jnp.float32))
+        dq_seg_specs = [pl.BlockSpec((1, bq), lambda b, i: (b, i)),
+                        pl.BlockSpec((1, s), lambda b, i: (b, 0))]
+        dkv_seg_specs = [pl.BlockSpec((1, s), lambda b, j: (b, 0)),
+                         pl.BlockSpec((1, bk), lambda b, j: (b, j))]
     dq = pl.pallas_call(
-        partial(_bwd_dq_kernel, bq=bq, bk=bk, scale=scale, causal=causal),
+        partial(_bwd_dq_kernel, bq=bq, bk=bk, scale=scale, causal=causal,
+                segmented=segmented),
         grid=(bh, s // bq),
         in_specs=[
             pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
@@ -167,13 +218,14 @@ def flash_attention_bwd(q, k, v, o, lse, do, *, bq=DEFAULT_BQ, bk=DEFAULT_BK,
             pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
             pl.BlockSpec((1, bq), lambda b, i: (b, i)),
             pl.BlockSpec((1, bq), lambda b, i: (b, i)),
-        ],
+        ] + dq_seg_specs,
         out_specs=pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
         interpret=interpret,
-    )(q, k, v, do, lse, delta)
+    )(q, k, v, do, lse, delta, *seg_args)
     dk, dv = pl.pallas_call(
-        partial(_bwd_dkv_kernel, bq=bq, bk=bk, scale=scale, causal=causal),
+        partial(_bwd_dkv_kernel, bq=bq, bk=bk, scale=scale, causal=causal,
+                segmented=segmented),
         grid=(bh, s // bk),
         in_specs=[
             pl.BlockSpec((1, s, d), lambda b, j: (b, 0, 0)),
@@ -182,13 +234,13 @@ def flash_attention_bwd(q, k, v, o, lse, do, *, bq=DEFAULT_BQ, bk=DEFAULT_BK,
             pl.BlockSpec((1, s, d), lambda b, j: (b, 0, 0)),
             pl.BlockSpec((1, s), lambda b, j: (b, 0)),
             pl.BlockSpec((1, s), lambda b, j: (b, 0)),
-        ],
+        ] + dkv_seg_specs,
         out_specs=(pl.BlockSpec((1, bk, d), lambda b, j: (b, j, 0)),
                    pl.BlockSpec((1, bk, d), lambda b, j: (b, j, 0))),
         out_shape=(jax.ShapeDtypeStruct((bh, s, d), k.dtype),
                    jax.ShapeDtypeStruct((bh, s, d), v.dtype)),
         interpret=interpret,
-    )(q, k, v, do, lse, delta)
+    )(q, k, v, do, lse, delta, *seg_args)
     return dq, dk, dv
 
 
@@ -217,3 +269,33 @@ def _vjp_bwd(causal, bq, bk, interpret, res, do):
 
 
 flash_attention.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def flash_attention_segmented(q, k, v, q_seg, k_seg, causal=True,
+                              bq=DEFAULT_BQ, bk=DEFAULT_BK, interpret=True):
+    """Segment-masked flash attention for packed batches. q_seg/k_seg:
+    [BH, S] segment ids as f32 (integers cast to float — exact for any
+    realistic segment count); attention is restricted to equal-segment
+    pairs. The ids ride through the custom_vjp as ordinary (zero-gradient)
+    operands so callers can differentiate wrt q/k/v as usual."""
+    o, _ = flash_attention_fwd(q, k, v, q_seg, k_seg, bq=bq, bk=bk,
+                               causal=causal, interpret=interpret)
+    return o
+
+
+def _vjp_seg_fwd(q, k, v, q_seg, k_seg, causal, bq, bk, interpret):
+    o, lse = flash_attention_fwd(q, k, v, q_seg, k_seg, bq=bq, bk=bk,
+                                 causal=causal, interpret=interpret)
+    return o, (q, k, v, o, lse, q_seg, k_seg)
+
+
+def _vjp_seg_bwd(causal, bq, bk, interpret, res, do):
+    q, k, v, o, lse, q_seg, k_seg = res
+    dq, dk, dv = flash_attention_bwd(q, k, v, o, lse, do, q_seg, k_seg,
+                                     bq=bq, bk=bk, causal=causal,
+                                     interpret=interpret)
+    return dq, dk, dv, jnp.zeros_like(q_seg), jnp.zeros_like(k_seg)
+
+
+flash_attention_segmented.defvjp(_vjp_seg_fwd, _vjp_seg_bwd)

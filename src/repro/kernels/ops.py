@@ -55,15 +55,22 @@ def masked_adamw(p, g, m, v, sel, counts, lr, b1, b2, eps, wd):
     return unpad(p2), m2[:, :r_orig].reshape(shape), v2[:, :r_orig].reshape(shape)
 
 
-def flash_attention(q, k, v, *, causal=True):
+def flash_attention(q, k, v, *, causal=True, segment_ids=None):
     """q,k,v: [B, S, H, D] (layer layout; kv already head-expanded) ->
-    [B, S, H, D]."""
+    [B, S, H, D]. ``segment_ids``: optional [B, S] packed segment ids
+    (0 = pad) — attention is block-diagonal over equal segments (the
+    segment-masked kernel; ids are repeated over the folded head axis)."""
     b, s, h, d = q.shape
     fold = lambda t: t.transpose(0, 2, 1, 3).reshape(b * h, s, d)  # noqa: E731
     bq = min(_fa.DEFAULT_BQ, s)
     bk = min(_fa.DEFAULT_BK, s)
-    o = _fa.flash_attention(fold(q), fold(k), fold(v), causal, bq, bk,
-                            _interpret())
+    if segment_ids is None:
+        o = _fa.flash_attention(fold(q), fold(k), fold(v), causal, bq, bk,
+                                _interpret())
+    else:
+        seg = jnp.repeat(jnp.asarray(segment_ids, jnp.float32), h, axis=0)
+        o = _fa.flash_attention_segmented(fold(q), fold(k), fold(v), seg,
+                                          seg, causal, bq, bk, _interpret())
     return o.reshape(b, h, s, d).transpose(0, 2, 1, 3)
 
 

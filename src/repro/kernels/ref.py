@@ -28,8 +28,10 @@ def masked_adamw(p, g, m, v, sel, counts, lr, b1, b2, eps, wd):
     return p2.astype(p.dtype), m2, v2
 
 
-def flash_attention(q, k, v, *, causal=True):
-    """q,k,v: [B, H, S, D] (MHA layout) -> [B, H, S, D]. f32 softmax."""
+def flash_attention(q, k, v, *, causal=True, segment_ids=None):
+    """q,k,v: [B, H, S, D] (MHA layout) -> [B, H, S, D]. f32 softmax.
+    ``segment_ids``: optional [B, S] packed segment ids — block-diagonal
+    masking (attend only within equal segments)."""
     s = q.shape[2]
     scale = q.shape[-1] ** -0.5
     scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
@@ -37,6 +39,10 @@ def flash_attention(q, k, v, *, causal=True):
     if causal:
         mask = jnp.tril(jnp.ones((s, s), bool))
         scores = jnp.where(mask[None, None], scores, -1e30)
+    if segment_ids is not None:
+        seg_ok = (segment_ids[:, None, :, None]
+                  == segment_ids[:, None, None, :])
+        scores = jnp.where(seg_ok, scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
     return out.astype(q.dtype)

@@ -37,6 +37,23 @@ def main():
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--global-batch", type=int, default=32)
+    ap.add_argument("--data", default="synthetic_math",
+                    choices=["synthetic_math", "jsonl", "jsonl_sft"],
+                    help="synthetic_math/jsonl: legacy pure-f(step) "
+                         "sources; jsonl_sft: streaming pipeline over "
+                         "{'prompt','completion'} lines (cursor "
+                         "checkpointed, packed under --pack)")
+    ap.add_argument("--data-path", default="",
+                    help="corpus path for --data jsonl / jsonl_sft")
+    ap.add_argument("--pack", action="store_true",
+                    help="segment-aware sequence packing (jsonl_sft, or "
+                         "synthetic_math via its record form): multiple "
+                         "examples per row with block-diagonal attention "
+                         "+ per-segment positions")
+    ap.add_argument("--prefetch-depth", type=int, default=0,
+                    help=">0: async prefetcher builds and device_puts this "
+                         "many batches ahead of the train loop "
+                         "(bit-identical trajectory, prefetch on or off)")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--offload", default="none", choices=["none", "host", "zero1"])
     ap.add_argument("--moment-residency", default="device",
@@ -96,8 +113,24 @@ def main():
             mesh = make_production_mesh(multi_pod=args.mesh == "multi")
         batch_axes = tuple(a for a in mesh.axis_names if a != "model")
 
+    data_source = None
+    if args.pack and args.data == "jsonl":
+        raise SystemExit("--pack needs example boundaries; use --data "
+                         "jsonl_sft ({'prompt','completion'} lines) — "
+                         "plain jsonl documents are ring-packed already")
+    if args.data != "synthetic_math" or args.pack:
+        from repro.data import loader
+        kind = args.data
+        if args.data == "synthetic_math" and args.pack:
+            kind = "packed_math"  # synthetic corpus as packable records
+        data_source = loader.make_source(
+            kind, seq_len=args.seq_len, global_batch=args.global_batch,
+            seed=args.seed, path=args.data_path, pack=args.pack)
+
     from repro.train.trainer import Trainer
-    trainer = Trainer(tcfg, mesh=mesh, batch_axes=batch_axes)
+    trainer = Trainer(tcfg, mesh=mesh, batch_axes=batch_axes,
+                      data_source=data_source,
+                      prefetch_depth=args.prefetch_depth)
     report = trainer.method.trainable_param_report(mcfg, trainer.state)
     resident = (f", resident {report.opt_bytes_resident / (1 << 20):.1f} MiB"
                 if report.opt_bytes_resident >= 0 else "")

@@ -29,13 +29,15 @@ def attn_block_init(key: jax.Array, cfg: ModelConfig, d_ff: int = 0) -> dict:
     }
 
 
-def attn_block_apply(params, cfg: ModelConfig, x, *, prefix_len=0, chunk_q=512):
+def attn_block_apply(params, cfg: ModelConfig, x, *, prefix_len=0, chunk_q=512,
+                     positions=None, segment_ids=None):
     h = norms.apply(params["ln1"], x, cfg.norm_eps)
     if cfg.use_mla:
         h = mla.apply(params["attn"], cfg, h, chunk_q=chunk_q)
     else:
         h = attention.apply(params["attn"], cfg, h, prefix_len=prefix_len,
-                            chunk_q=chunk_q)
+                            chunk_q=chunk_q, positions=positions,
+                            segment_ids=segment_ids)
     x = x + h
     h = norms.apply(params["ln2"], x, cfg.norm_eps)
     x = x + mlp.apply(params["mlp"], cfg, h)
@@ -88,12 +90,14 @@ def moe_block_init(key: jax.Array, cfg: ModelConfig) -> dict:
 
 
 def moe_block_apply(params, cfg: ModelConfig, x, *, mesh=None,
-                    batch_axes=("data",), chunk_q=512):
+                    batch_axes=("data",), chunk_q=512, positions=None,
+                    segment_ids=None):
     h = norms.apply(params["ln1"], x, cfg.norm_eps)
     if cfg.use_mla:
         h = mla.apply(params["attn"], cfg, h, chunk_q=chunk_q)
     else:
-        h = attention.apply(params["attn"], cfg, h, chunk_q=chunk_q)
+        h = attention.apply(params["attn"], cfg, h, chunk_q=chunk_q,
+                            positions=positions, segment_ids=segment_ids)
     x = x + h
     h = norms.apply(params["ln2"], x, cfg.norm_eps)
     y, aux = moe.apply(params["moe"], cfg, h, mesh=mesh, batch_axes=batch_axes)

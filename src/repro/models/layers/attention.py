@@ -70,15 +70,21 @@ def _project_qkv(params, cfg: ModelConfig, x, positions):
 
 
 def apply(params: dict, cfg: ModelConfig, x: jax.Array, *, positions=None,
-          prefix_len: int = 0, chunk_q: int = 512) -> jax.Array:
-    """Training/prefill forward (causal). x: [B, S, D] -> [B, S, D]."""
+          prefix_len: int = 0, chunk_q: int = 512,
+          segment_ids=None) -> jax.Array:
+    """Training/prefill forward (causal). x: [B, S, D] -> [B, S, D].
+
+    ``positions``: [S] or [B, S] RoPE positions (packed batches pass
+    per-segment-reset positions). ``segment_ids``: [B, S] packed segment
+    ids (0 = pad) — attention is block-diagonal over equal segments."""
     b, s, _ = x.shape
     if positions is None:
         positions = jnp.arange(s)
     q, k, v = _project_qkv(params, cfg, x, positions)
     out = core.chunked_attention(q, k, v, hmap=_hmap(cfg), chunk_q=chunk_q,
                                  causal=True, prefix_len=prefix_len,
-                                 softcap=cfg.attn_logit_softcap)
+                                 softcap=cfg.attn_logit_softcap,
+                                 segment_ids=segment_ids)
     out = out.astype(x.dtype)
     hm = _head_mask(cfg, out.dtype)
     if hm is not None:

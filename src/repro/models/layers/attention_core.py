@@ -46,10 +46,16 @@ def _softcap(scores: jax.Array, cap: float) -> jax.Array:
 
 
 def full_attention(q, k, v, *, hmap=None, causal=True, q_offset=0,
-                   prefix_len=0, softcap=0.0, kv_len_mask=None):
+                   prefix_len=0, softcap=0.0, kv_len_mask=None,
+                   q_seg=None, k_seg=None):
     """Exact attention. q: [B, Sq, H, Dh]; k: [B, Sk, KVH, Dh];
     v: [B, Sk, KVH, Dv]; hmap: head2group map (None -> MHA identity).
-    kv_len_mask: [B, Sk] bool of valid cache slots."""
+    kv_len_mask: [B, Sk] bool of valid cache slots.
+    q_seg/k_seg: [B, Sq]/[B, Sk] packed segment ids — scores are masked to
+    equal-segment pairs (block-diagonal attention; combined with the causal
+    row-position mask this is exactly per-example causal attention). A
+    query always keeps its own position (q_seg[i] == k_seg[i] at the same
+    index), so no softmax row is ever fully masked."""
     b, sq, h, dh = q.shape
     sk = k.shape[1]
     if hmap is None:
@@ -68,15 +74,23 @@ def full_attention(q, k, v, *, hmap=None, causal=True, q_offset=0,
         scores = jnp.where(mask[None, None], scores, NEG_INF)
     if kv_len_mask is not None:
         scores = jnp.where(kv_len_mask[:, None, None, :], scores, NEG_INF)
+    if q_seg is not None:
+        seg_ok = q_seg[:, None, :, None] == k_seg[:, None, None, :]
+        scores = jnp.where(seg_ok, scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhqk,bkhd->bqhd", probs, ve)
     return out.astype(q.dtype)
 
 
 def chunked_attention(q, k, v, *, hmap=None, chunk_q=512, causal=True,
-                      prefix_len=0, softcap=0.0, remat_chunks=True):
+                      prefix_len=0, softcap=0.0, remat_chunks=True,
+                      segment_ids=None):
     """Exact causal attention, scanned over query chunks to bound memory.
     S must be divisible by chunk_q (or <= chunk_q).
+
+    ``segment_ids``: [B, S] packed segment ids (0 = pad) — block-diagonal
+    masking as in full_attention; the query-side ids are chunked along with
+    q, the key side stays whole.
 
     ``remat_chunks``: rematerialize each chunk's probs in the backward
     instead of stashing [nq, B, H, chunk, S] f32 residuals (that tensor is
@@ -85,21 +99,27 @@ def chunked_attention(q, k, v, *, hmap=None, chunk_q=512, causal=True,
     b, s, h, dh = q.shape
     if s <= chunk_q:
         return full_attention(q, k, v, hmap=hmap, causal=causal,
-                              prefix_len=prefix_len, softcap=softcap)
+                              prefix_len=prefix_len, softcap=softcap,
+                              q_seg=segment_ids, k_seg=segment_ids)
     assert s % chunk_q == 0, (s, chunk_q)
     nq = s // chunk_q
     qs = q.reshape(b, nq, chunk_q, h, dh).transpose(1, 0, 2, 3, 4)
+    segs = (None if segment_ids is None
+            else segment_ids.reshape(b, nq, chunk_q).transpose(1, 0, 2))
 
     def body(_, args):
-        i, qc = args
+        i, qc, qsc = args if segs is not None else (*args, None)
         out = full_attention(qc, k, v, hmap=hmap, causal=causal,
                              q_offset=i * chunk_q, prefix_len=prefix_len,
-                             softcap=softcap)
+                             softcap=softcap, q_seg=qsc,
+                             k_seg=None if qsc is None else segment_ids)
         return None, out
 
     if remat_chunks:
         body = jax.checkpoint(body)
-    _, outs = jax.lax.scan(body, None, (jnp.arange(nq), qs))
+    xs = ((jnp.arange(nq), qs) if segs is None
+          else (jnp.arange(nq), qs, segs))
+    _, outs = jax.lax.scan(body, None, xs)
     return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, v.shape[-1])
 
 

@@ -147,11 +147,47 @@ def init(key: jax.Array, cfg: ModelConfig) -> dict:
 # --------------------------------------------------------------- train fwd
 
 
+def _check_packed_support(cfg: ModelConfig):
+    """Packed batches need block-diagonal attention; families whose token
+    mixing is not per-position-maskable (SSM state scans, the shared-attn
+    hybrid) and the MLA/vlm paths don't implement it — reject loudly rather
+    than silently training across example boundaries."""
+    if cfg.family in ("ssm", "hybrid"):
+        raise ValueError(
+            f"segment-packed batches are not supported for family="
+            f"{cfg.family!r}: the SSM state scan carries context across "
+            f"segment boundaries. Use the unpacked pipeline (pack=False) "
+            f"for this architecture.")
+    if cfg.family == "vlm":
+        raise ValueError(
+            "segment-packed batches are not supported for family='vlm' "
+            "(the patch prefix is shared by every row); use pack=False")
+    if cfg.use_mla:
+        raise ValueError(
+            "segment-packed batches are not implemented for MLA attention; "
+            "use pack=False or a GQA/MHA architecture")
+    if cfg.mtp_depth:
+        raise ValueError(
+            "segment-packed batches are not implemented for mtp_depth > 0: "
+            "the MTP head's attention is not segment-masked and its "
+            "shift-2 loss would cross example boundaries; use pack=False")
+
+
 def apply_train(params: dict, cfg: ModelConfig, batch: dict, *, mesh=None,
                 batch_axes=("data",), masks: dict | None = None):
-    """-> (logits aligned to batch['tokens'], aux_loss, extra)."""
+    """-> (logits aligned to batch['tokens'], aux_loss, extra).
+
+    Packed SFT batches (data/pipeline) additionally carry
+    ``segment_ids`` [B, S] (0 = pad) and ``positions`` [B, S]
+    (per-segment reset): attention becomes block-diagonal over segments and
+    RoPE sees each example at its unpacked positions, so the packed forward
+    equals running every segment as its own row."""
     tokens = batch["tokens"]
     masks = masks or {}
+    segment_ids = batch.get("segment_ids")
+    positions = batch.get("positions")
+    if segment_ids is not None:
+        _check_packed_support(cfg)
     x = _embed_tokens(params, cfg, tokens)
     prefix_len = 0
     if cfg.family == "vlm":
@@ -161,16 +197,18 @@ def apply_train(params: dict, cfg: ModelConfig, batch: dict, *, mesh=None,
 
     aux = jnp.zeros((), jnp.float32)
     if cfg.family in ("dense", "vlm"):
-        fn = partial(_apply_attn_block, cfg, prefix_len)
+        fn = partial(_apply_attn_block, cfg, prefix_len, positions,
+                     segment_ids)
         x, a = scan_stack(cfg, fn, x, params["layers"], masks.get("layers"))
         aux += a
     elif cfg.family == "moe":
         if cfg.first_k_dense:
-            fn = partial(_apply_attn_block, cfg, 0)
+            fn = partial(_apply_attn_block, cfg, 0, positions, segment_ids)
             x, a = scan_stack(cfg, fn, x, params["dense_layers"],
                               masks.get("dense_layers"))
             aux += a
-        fn = partial(_apply_moe_block, cfg, mesh, batch_axes)
+        fn = partial(_apply_moe_block, cfg, mesh, batch_axes, positions,
+                     segment_ids)
         x, a = scan_stack(cfg, fn, x, params["moe_layers"], masks.get("moe_layers"))
         aux += a
     elif cfg.family == "ssm":
@@ -194,12 +232,16 @@ def apply_train(params: dict, cfg: ModelConfig, batch: dict, *, mesh=None,
     return logits, aux, extra
 
 
-def _apply_attn_block(cfg, prefix_len, p_l, x):
-    return blocks.attn_block_apply(p_l, cfg, x, prefix_len=prefix_len)
+def _apply_attn_block(cfg, prefix_len, positions, segment_ids, p_l, x):
+    return blocks.attn_block_apply(p_l, cfg, x, prefix_len=prefix_len,
+                                   positions=positions,
+                                   segment_ids=segment_ids)
 
 
-def _apply_moe_block(cfg, mesh, batch_axes, p_l, x):
-    return blocks.moe_block_apply(p_l, cfg, x, mesh=mesh, batch_axes=batch_axes)
+def _apply_moe_block(cfg, mesh, batch_axes, positions, segment_ids, p_l, x):
+    return blocks.moe_block_apply(p_l, cfg, x, mesh=mesh,
+                                  batch_axes=batch_axes, positions=positions,
+                                  segment_ids=segment_ids)
 
 
 def _apply_ssm_block(cfg, p_l, x):

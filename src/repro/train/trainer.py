@@ -11,9 +11,20 @@ method's ``state_shardings()`` tree (params/moments sharded or replicated,
 HOST_RESIDENT leaves left in host RAM), and hands the sharding tree to
 ``make_step`` so compiled steps pin their outputs to the same layout
 (compile-once under data parallelism). Fault-tolerance contract:
-  * `checkpoint_every` saves are async + atomic, include the full TrainState
-    (method state included) and the data cursor IS the step counter;
+  * `checkpoint_every` saves are async + atomic and include the full
+    TrainState (method state included) plus the data cursor: for legacy
+    pure-f(step) sources the cursor IS the step counter; streaming pipelines
+    (repro.data.pipeline) serialize their record cursor into the checkpoint
+    meta and resume the packed stream exactly;
   * on start, `maybe_restore()` resumes from the latest checkpoint;
+
+Data enters through an iterator seam: ``_batch_stream`` yields
+``(host_batch, cursor_after)`` pairs (legacy ``batch_at`` sources ride a
+StepIndexedAdapter), and with ``prefetch_depth > 0`` a background
+``Prefetcher`` builds and device_puts up to that many batches ahead
+(respecting the mesh batch sharding) so host batch construction overlaps
+device compute. Prefetch on/off changes timing only — trajectories are
+bit-identical.
   * a step-time EWMA watchdog flags stragglers (> tau * EWMA) and calls the
     configurable `on_straggler` hook (default: log; production: abort to the
     last checkpoint so the scheduler can replace the slow host).
@@ -60,7 +71,8 @@ def _place_state(state, shardings):
 class Trainer:
     def __init__(self, tcfg: TrainConfig, *, mesh=None, batch_axes=("data",),
                  method: str | None = None, data_source=None,
-                 batch_shardings=None, on_straggler=None, use_pallas=False):
+                 batch_shardings=None, on_straggler=None, use_pallas=False,
+                 prefetch_depth: int = 0):
         self.tcfg = tcfg
         self.mesh = mesh
         self.method_name = method or tcfg.method
@@ -104,10 +116,12 @@ class Trainer:
         self.data = data_source or data_loader.make_source(
             "synthetic_math", seq_len=tcfg.seq_len,
             global_batch=tcfg.global_batch, seed=tcfg.seed)
+        self.prefetch_depth = prefetch_depth
         self.ckpt = (CheckpointManager(tcfg.checkpoint_dir, tcfg.checkpoint_keep)
                      if tcfg.checkpoint_dir else None)
         self.log = TrainLog()
         self._ewma = None
+        self._data_cursor = None  # cursor AFTER the last consumed batch
 
     # ------------------------------------------------------------- resume
     def maybe_restore(self) -> int:
@@ -117,6 +131,12 @@ class Trainer:
         # the sharded-store round-trip and elastic resharding both land here
         self.state, step = self.ckpt.restore(
             self.state, shardings=self.state_shardings)
+        # streaming sources (data/pipeline) resume their record stream from
+        # the cursor saved next to the TrainState; pure-f(step) sources need
+        # only the step counter (their "cursor" is implicit)
+        cursor = self.ckpt.load_meta(step).get("data_cursor")
+        if cursor is not None and hasattr(self.data, "restore_cursor"):
+            self.data.restore_cursor(cursor)
         return step
 
     # ------------------------------------------------------------- loop
@@ -128,6 +148,19 @@ class Trainer:
                 lambda x: jax.device_put(x, self._batch_sharding), batch)
         return batch
 
+    def _batch_stream(self, step0: int, steps: int):
+        """(host_batch, cursor_after) pairs for the next ``steps`` steps.
+
+        Streaming pipelines (anything with ``.batches``) iterate from their
+        committed cursor; legacy pure-``f(step)`` sources go through the
+        StepIndexedAdapter. Either way the generator never mutates source
+        state — the loop commits consumption via ``restore_cursor`` — so a
+        prefetcher may run it arbitrarily far ahead."""
+        if hasattr(self.data, "batches"):
+            return self.data.batches(steps)
+        from repro.data.pipeline import StepIndexedAdapter
+        return StepIndexedAdapter(self.data, step0).batches(steps)
+
     def train(self, steps: int | None = None, start_step: int | None = None):
         tcfg = self.tcfg
         steps = steps if steps is not None else tcfg.steps
@@ -135,8 +168,25 @@ class Trainer:
         last = step0 + steps - 1
         pending = []  # (step, device-scalar loss) since the last boundary
         t0 = time.perf_counter()
+        from repro.data.pipeline import Prefetcher
+        fetch = Prefetcher(self._batch_stream(step0, steps),
+                           self._device_batch, depth=self.prefetch_depth)
+        try:
+            self._train_loop(tcfg, fetch, step0, steps, last, pending, t0)
+        finally:
+            fetch.close()
+            # commit consumption: read-ahead must not advance the stream
+            # past what the loop actually trained on
+            if (self._data_cursor is not None
+                    and hasattr(self.data, "restore_cursor")):
+                self.data.restore_cursor(self._data_cursor)
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        return self.log
+
+    def _train_loop(self, tcfg, fetch, step0, steps, last, pending, t0):
         for step in range(step0, step0 + steps):
-            batch = self._device_batch(self.data.batch_at(step))
+            batch, self._data_cursor = next(fetch)
             if not pending:
                 t0 = time.perf_counter()
             self.state, metrics = self.step_fn(self.state, batch)
@@ -168,7 +218,8 @@ class Trainer:
                 self.log.metrics.append({"step": step, **small})
             if (self.ckpt is not None and tcfg.checkpoint_every
                     and (step + 1) % tcfg.checkpoint_every == 0):
-                self.ckpt.save(step + 1, self.state)
-        if self.ckpt is not None:
-            self.ckpt.wait()
-        return self.log
+                # the data cursor rides along in meta.json: restoring this
+                # checkpoint resumes the record stream exactly after the
+                # batch consumed at `step` (no skips, no repeats)
+                self.ckpt.save(step + 1, self.state,
+                               extra_meta={"data_cursor": self._data_cursor})

@@ -3,7 +3,7 @@ tiny deterministic stand-in so the suite still collects and runs.
 
 The fallback implements only what this repo's tests use — ``@given`` with
 keyword strategies, ``@settings(max_examples=..., deadline=...)``, and the
-``integers`` / ``floats`` / ``sampled_from`` strategies. Each decorated test
+``integers`` / ``floats`` / ``sampled_from`` / ``text`` strategies. Each decorated test
 runs ``max_examples`` times with samples drawn from a fixed-seed PRNG, so
 failures reproduce. Install the real dependency (requirements-dev.txt) for
 shrinking, edge-case generation, and the full strategy library.
@@ -41,6 +41,19 @@ except ModuleNotFoundError:
         def sampled_from(elements):
             elements = list(elements)
             return _Strategy(lambda r: r.choice(elements))
+
+        @staticmethod
+        def text(min_size=0, max_size=40):
+            """Unicode strings mixing ASCII, multi-byte BMP, and astral
+            codepoints (surrogates excluded — not encodable to UTF-8)."""
+            pools = ((0x20, 0x7E), (0xA0, 0x2FF), (0x400, 0x4FF),
+                     (0x4E00, 0x4FFF), (0x1F300, 0x1F5FF))
+
+            def draw(r):
+                n = r.randint(min_size, max_size)
+                return "".join(chr(r.randint(*r.choice(pools)))
+                               for _ in range(n))
+            return _Strategy(draw)
 
     def settings(max_examples=None, deadline=None, **_kw):
         def deco(fn):

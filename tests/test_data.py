@@ -2,6 +2,7 @@
 import json
 
 import numpy as np
+import pytest
 from _hypothesis_shim import given, settings, st
 
 from repro.data import loader, synthetic, tokenizer
@@ -51,6 +52,14 @@ def test_host_local_slice():
         np.concatenate([s0["tokens"], s1["tokens"]]), batch["tokens"])
 
 
+def test_host_local_slice_rejects_nondivisible_batch():
+    """Silently dropping trailing rows would desync the global batch across
+    process counts — must raise instead."""
+    batch = {"tokens": np.arange(28).reshape(7, 4)}
+    with pytest.raises(ValueError, match="divisible by process_count=2"):
+        loader.host_local_slice(batch, 0, 2)
+
+
 def test_jsonl_source_packs(tmp_path):
     p = tmp_path / "docs.jsonl"
     with open(p, "w") as f:
@@ -63,7 +72,56 @@ def test_jsonl_source_packs(tmp_path):
     np.testing.assert_array_equal(b["tokens"], b2["tokens"])
 
 
+def test_jsonl_source_pads_short_corpus(tmp_path):
+    """A corpus shorter than one row must pad the tail, not crash in the
+    ring reshape."""
+    p = tmp_path / "tiny.jsonl"
+    with open(p, "w") as f:
+        f.write(json.dumps({"text": "hi"}) + "\n")
+    src = loader.JsonlSource(str(p), seq_len=32, global_batch=2)
+    b = src.batch_at(0)
+    assert b["tokens"].shape == (2, 32)
+    # the real tokens survive, the tail is PAD and loss-masked out
+    assert tokenizer.decode(b["tokens"][0]) == "hi"
+    n_real = len(tokenizer.encode("hi"))
+    assert (b["tokens"][0][n_real:] == tokenizer.PAD).all()
+    assert (b["loss_mask"][0][n_real:] == 0).all()
+
+
+def test_jsonl_source_empty_corpus_actionable(tmp_path):
+    p = tmp_path / "empty.jsonl"
+    p.write_text("")
+    with pytest.raises(ValueError, match="empty"):
+        loader.JsonlSource(str(p), seq_len=32, global_batch=2)
+
+
 def test_byte_tokenizer_roundtrip():
     s = "AdaGradSelect: 3 + 4 = 7 ✓"
     ids = tokenizer.encode(s)
     assert tokenizer.decode(ids) == s
+
+
+@settings(max_examples=50, deadline=None)
+@given(s=st.text(max_size=64))
+def test_byte_tokenizer_roundtrip_property(s):
+    """encode/decode is the identity on arbitrary unicode text, with and
+    without BOS/EOS framing."""
+    assert tokenizer.decode(tokenizer.encode(s)) == s
+    assert tokenizer.decode(
+        tokenizer.encode(s, add_bos=False, add_eos=False)) == s
+
+
+@settings(max_examples=25, deadline=None)
+@given(s=st.text(max_size=32))
+def test_byte_tokenizer_framing_and_stripping(s):
+    """BOS/EOS land exactly where requested; decode strips every special id
+    (PAD padding included) without touching content bytes."""
+    ids = tokenizer.encode(s)
+    assert ids[0] == tokenizer.BOS and ids[-1] == tokenizer.EOS
+    assert len(ids) == len(s.encode("utf-8")) + 2
+    bare = tokenizer.encode(s, add_bos=False, add_eos=False)
+    assert (len(bare) == 0
+            or (bare[0] != tokenizer.BOS and bare[-1] != tokenizer.EOS))
+    padded = np.concatenate(
+        [ids, np.full(7, tokenizer.PAD, np.int32)])
+    assert tokenizer.decode(padded) == s

@@ -1,0 +1,406 @@
+"""Streaming SFT pipeline: packing parity, prefetch determinism, cursor
+resume, segment-masked attention, and the dp=8 sharded prefetch path.
+
+The load-bearing pins:
+  * packed loss/gradients == the per-example unpacked oracle (block-diagonal
+    attention + reset positions make packing exact, not approximate);
+  * prefetch on/off trajectories are bit-identical (single-device here,
+    dp=8 in the multidevice test);
+  * a mid-run checkpoint stores the record cursor and resumes the packed
+    stream with no skipped or repeated records.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.base import (ModelConfig, OptimizerConfig, SelectConfig,
+                                TrainConfig)
+from repro.data import loader
+from repro.data.pipeline import (JsonlSftRecords, Prefetcher, Record,
+                                 SFTPipeline, SyntheticMathRecords, packing)
+from repro.data.synthetic import MathTaskConfig
+from repro.data import tokenizer as tok
+from repro.models import lm
+from repro.train import step as step_mod
+from repro.train.trainer import Trainer
+
+TINY = ModelConfig(name="pipe-tiny", family="dense", num_layers=2,
+                   d_model=32, num_heads=2, num_kv_heads=2, head_dim=16,
+                   d_ff=64, vocab_size=32, dtype="float32", remat="none")
+
+
+def math_records(n=64, seq_len=64):
+    return SyntheticMathRecords(MathTaskConfig(digits=3, seq_len=seq_len),
+                                num_records=n)
+
+
+def write_sft_corpus(path, n=24, seed=0):
+    """Variable-length prompt/completion jsonl corpus."""
+    rng = np.random.default_rng(seed)
+    with open(path, "w") as f:
+        for i in range(n):
+            p = "Q: " + " ".join(str(rng.integers(100))
+                                 for _ in range(int(rng.integers(2, 12))))
+            c = "A: " + " ".join(str(rng.integers(100))
+                                 for _ in range(int(rng.integers(1, 18))))
+            f.write(json.dumps({"prompt": p, "completion": c}) + "\n")
+    return str(path)
+
+
+# ------------------------------------------------------------- packer units
+
+
+def test_pack_batch_layout_invariants():
+    src = math_records()
+    batch, nxt = packing.pack_batch(src, 0, 4, 128)
+    toks, mask = batch["tokens"], batch["loss_mask"]
+    segs, pos = batch["segment_ids"], batch["positions"]
+    assert toks.shape == mask.shape == segs.shape == pos.shape == (4, 128)
+    assert nxt > 4  # multi-segment rows on a 64-token-max corpus
+    for r in range(4):
+        row_segs = segs[r]
+        n_seg = int(row_segs.max())
+        assert n_seg >= 1
+        # segment ids are 1..n contiguous, pad tail is 0
+        nz = row_segs[row_segs != 0]
+        assert set(np.unique(nz)) == set(range(1, n_seg + 1))
+        for s in range(1, n_seg + 1):
+            idx = np.nonzero(row_segs == s)[0]
+            assert (np.diff(idx) == 1).all()          # contiguous
+            np.testing.assert_array_equal(            # positions reset
+                pos[r, idx], np.arange(len(idx)))
+            assert mask[r, idx[0]] == 0               # starts loss-masked
+        # pad tail carries no loss and PAD tokens
+        pad = row_segs == 0
+        assert (mask[r, pad] == 0).all() and (toks[r, pad] == tok.PAD).all()
+
+
+def test_pack_batch_pure_in_cursor():
+    src = math_records()
+    b1, n1 = packing.pack_batch(src, 7, 3, 96)
+    b2, n2 = packing.pack_batch(src, 7, 3, 96)
+    assert n1 == n2
+    for k in b1:
+        np.testing.assert_array_equal(b1[k], b2[k])
+
+
+def test_pack_batch_no_record_skipped_or_split():
+    """Consecutive batches consume a contiguous record range; every
+    consumed record appears exactly once, whole."""
+    src = math_records(n=50)
+    cur = 0
+    seen = []
+    for _ in range(3):
+        batch, nxt = packing.pack_batch(src, cur, 2, 128)
+        total_seg = sum(int(batch["segment_ids"][r].max())
+                        for r in range(2))
+        assert total_seg == nxt - cur
+        seen.extend(range(cur, nxt))
+        cur = nxt
+    assert seen == list(range(cur))
+
+
+def test_record_longer_than_row_truncates():
+    class One:
+        num_records = 1
+
+        def record_at(self, i):
+            return Record(prompt=np.arange(3, 10, dtype=np.int32),
+                          completion=np.arange(10, 60, dtype=np.int32))
+    batch, nxt = packing.pack_batch(One(), 0, 1, 16)
+    assert nxt == 1  # consumed (not an infinite loop), truncated to L
+    assert int(batch["segment_ids"][0].max()) == 1
+    assert (batch["segment_ids"][0] == 1).all()
+
+
+def test_record_requires_nonempty_prompt():
+    with pytest.raises(ValueError, match="non-empty"):
+        Record(prompt=np.zeros(0, np.int32),
+               completion=np.arange(3, dtype=np.int32))
+
+
+def test_jsonl_sft_records_schema(tmp_path):
+    path = write_sft_corpus(tmp_path / "sft.jsonl", n=5)
+    src = JsonlSftRecords(path)
+    assert src.num_records == 5
+    rec = src.record_at(0)
+    assert rec.prompt[0] == tok.BOS and rec.completion[-1] == tok.EOS
+    # prompt/completion text round-trips
+    assert tok.decode(rec.prompt).startswith("Q:")
+    assert tok.decode(rec.completion).startswith("A:")
+    with pytest.raises(ValueError, match="prompt.*completion|completion"):
+        p = tmp_path / "bad.jsonl"
+        p.write_text(json.dumps({"text": "nope"}) + "\n")
+        JsonlSftRecords(str(p))
+
+
+# --------------------------------------------------------- packing parity
+
+
+def test_packed_loss_and_grads_match_unpacked_oracle():
+    """The acceptance pin: segment-aware masking + reset positions make the
+    packed batch's loss AND gradients equal the per-example oracle."""
+    params = lm.init(jax.random.PRNGKey(0), TINY)
+    src = math_records()
+    packed, nrec = packing.pack_batch(src, 0, 2, 128)
+    assert nrec >= 4  # actually multi-segment
+    oracle, _ = packing.unpacked_batch(src, 0, nrec, 128)
+    plain = {"tokens": oracle["tokens"], "loss_mask": oracle["loss_mask"]}
+
+    def loss(p, b):
+        arrs = {k: jnp.asarray(v) for k, v in b.items()}
+        return step_mod.model_loss(lm, TINY, p, arrs)[0]
+
+    (l1, g1) = jax.value_and_grad(loss)(params, packed)
+    (l2, g2) = jax.value_and_grad(loss)(params, plain)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=2e-6)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-6, rtol=2e-5)
+
+
+def test_unpacked_batch_is_plain_layout():
+    """pack=False emits only the legacy keys — single-segment rows ARE the
+    plain causal path, and the batch stays consumable by families that
+    reject packed segments (the documented escape hatch)."""
+    batch, _ = packing.unpacked_batch(math_records(), 3, 4, 64)
+    assert set(batch) == {"tokens", "loss_mask"}
+
+
+def test_unpacked_pipeline_trains_ssm_family():
+    """The escape hatch the packed-reject error points at must actually
+    work: an SSM stack trains on a pack=False pipeline."""
+    cfg = get_smoke_config("mamba2-2.7b").replace(remat="none")
+    tcfg = TrainConfig(
+        model=cfg, select=SelectConfig(policy="adagradselect", k_percent=40),
+        optimizer=OptimizerConfig(lr=1e-3, schedule="constant",
+                                  warmup_steps=0),
+        seq_len=64, global_batch=2, steps=2, log_every=0)
+    pipe = SFTPipeline(math_records(), seq_len=64, global_batch=2,
+                       pack=False)
+    log = Trainer(tcfg, data_source=pipe, prefetch_depth=2).train(steps=2)
+    assert len(log.losses) == 2 and np.isfinite(log.losses).all()
+
+
+@pytest.mark.parametrize("cfg,msg", [
+    (get_smoke_config("mamba2-2.7b"), "ssm"),
+    (TINY.replace(mtp_depth=1), "mtp_depth"),
+])
+def test_packed_rejected_for_unsupported_configs(cfg, msg):
+    params_shape = None  # init not needed — the check fires first
+    batch = {"tokens": jnp.zeros((1, 8), jnp.int32),
+             "loss_mask": jnp.zeros((1, 8), jnp.float32),
+             "segment_ids": jnp.ones((1, 8), jnp.int32),
+             "positions": jnp.zeros((1, 8), jnp.int32)}
+    with pytest.raises(ValueError, match=msg):
+        lm.apply_train(params_shape, cfg, batch)
+
+
+# ------------------------------------------------------------- prefetcher
+
+
+def test_prefetcher_preserves_order_and_values():
+    def stream():
+        for i in range(20):
+            yield {"x": np.full((2,), i)}, {"record": i + 1}
+    with Prefetcher(stream(), lambda b: b, depth=4) as pf:
+        out = list(pf)
+    assert [c["record"] for _, c in out] == list(range(1, 21))
+    assert all(int(b["x"][0]) == i for i, (b, _) in enumerate(out))
+
+
+def test_prefetcher_depth0_is_synchronous():
+    pf = Prefetcher(iter([({"x": 1}, {"record": 1})]), depth=0)
+    assert pf._thread is None
+    assert next(pf) == ({"x": 1}, {"record": 1})
+    with pytest.raises(StopIteration):
+        next(pf)
+
+
+def test_prefetcher_surfaces_worker_errors():
+    def stream():
+        yield {"x": 1}, {"record": 1}
+        raise RuntimeError("boom")
+    with Prefetcher(stream(), depth=2) as pf:
+        next(pf)
+        with pytest.raises(RuntimeError, match="boom"):
+            while True:
+                next(pf)
+
+
+def test_prefetcher_close_unblocks_producer():
+    """A full queue + early consumer exit must not deadlock or leak."""
+    def stream():
+        i = 0
+        while True:
+            yield {"x": i}, {"record": i}
+            i += 1
+    pf = Prefetcher(stream(), depth=1)
+    next(pf)
+    pf.close()
+    assert pf._thread is None
+
+
+def test_pipeline_readahead_does_not_advance_cursor():
+    """batches() iterates a local cursor — the committed cursor moves only
+    via restore_cursor (what the trainer consumed)."""
+    pipe = SFTPipeline(math_records(), seq_len=64, global_batch=2)
+    gen = pipe.batches()
+    _, c1 = next(gen)
+    _, c2 = next(gen)
+    assert c2["record"] > c1["record"] > 0
+    assert pipe.cursor() == {"record": 0}
+    pipe.restore_cursor(c1)
+    _, c1b = next(pipe.batches())
+    assert c1b["record"] == c2["record"]  # resumed exactly after batch 1
+
+
+# ------------------------------------------------- trainer integration
+
+
+def _tcfg(ckdir="", steps=6):
+    return TrainConfig(
+        model=TINY,
+        select=SelectConfig(policy="adagradselect", k_percent=40),
+        optimizer=OptimizerConfig(lr=1e-3, schedule="constant",
+                                  warmup_steps=0),
+        seq_len=64, global_batch=4, steps=steps, log_every=0,
+        checkpoint_dir=ckdir, checkpoint_every=3)
+
+
+def _pipe(seq_len=64, batch=4):
+    return loader.make_source("packed_math", seq_len=seq_len,
+                              global_batch=batch, num_records=64)
+
+
+def test_prefetch_on_off_bit_identical_trajectory():
+    t_off = Trainer(_tcfg(), data_source=_pipe())
+    t_off.train(steps=5)
+    t_on = Trainer(_tcfg(), data_source=_pipe(), prefetch_depth=3)
+    t_on.train(steps=5)
+    assert t_off.data.cursor() == t_on.data.cursor()
+    for a, b in zip(jax.tree.leaves(t_off.state["params"]),
+                    jax.tree.leaves(t_on.state["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_legacy_source_with_prefetch_bit_identical():
+    """The batch_at adapter seam: legacy sources keep working, with or
+    without the prefetcher."""
+    t_off = Trainer(_tcfg())
+    t_off.train(steps=4)
+    t_on = Trainer(_tcfg(), prefetch_depth=2)
+    t_on.train(steps=4)
+    for a, b in zip(jax.tree.leaves(t_off.state["params"]),
+                    jax.tree.leaves(t_on.state["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_cursor_resume_exact(tmp_path):
+    """3 + save + restore + 3 == 6 straight, through the PACKED stream
+    (cursor in checkpoint meta; prefetch read-ahead must not leak into the
+    saved cursor)."""
+    t1 = Trainer(_tcfg(), data_source=_pipe(), prefetch_depth=2)
+    t1.train(steps=6)
+
+    d = str(tmp_path / "ck")
+    t2 = Trainer(_tcfg(d), data_source=_pipe(), prefetch_depth=2)
+    t2.train(steps=3)
+    saved_cursor = t2.ckpt.load_meta(3)["data_cursor"]
+    assert saved_cursor == t2.data.cursor()  # no read-ahead leakage
+
+    t3 = Trainer(_tcfg(d), data_source=_pipe(), prefetch_depth=2)
+    start = t3.maybe_restore()
+    assert start == 3
+    assert t3.data.cursor() == saved_cursor
+    t3.train(steps=3, start_step=start)
+    assert t3.data.cursor() == t1.data.cursor()  # no skip, no repeat
+    for a, b in zip(jax.tree.leaves(t1.state["params"]),
+                    jax.tree.leaves(t3.state["params"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-6)
+
+
+def test_jsonl_sft_end_to_end(tmp_path):
+    """Real-corpus path: jsonl_sft records -> packed batches -> train."""
+    path = write_sft_corpus(tmp_path / "sft.jsonl", n=32)
+    pipe = loader.make_source("jsonl_sft", seq_len=64, global_batch=2,
+                              path=path)
+    cfg = TINY.replace(vocab_size=tok.VOCAB_SIZE)
+    tcfg = TrainConfig(
+        model=cfg, select=SelectConfig(policy="adagradselect", k_percent=40),
+        optimizer=OptimizerConfig(lr=1e-3, schedule="constant",
+                                  warmup_steps=0),
+        seq_len=64, global_batch=2, steps=3, log_every=0)
+    tr = Trainer(tcfg, data_source=pipe, prefetch_depth=2)
+    log = tr.train(steps=3)
+    assert len(log.losses) == 3 and np.isfinite(log.losses).all()
+    assert pipe.cursor()["record"] > 0
+
+
+def test_packing_stats_beats_drop_remainder(tmp_path):
+    """The bench_data metric on a variable-length corpus: greedy packing
+    keeps (supervises) more completion tokens than the legacy
+    concat/reshape drop-remainder layout, and fills slots better than
+    per-example padding."""
+    path = write_sft_corpus(tmp_path / "sft.jsonl", n=40, seed=3)
+    stats = packing.packing_stats(JsonlSftRecords(path), seq_len=256,
+                                  batch_size=4)
+    assert stats["packed_kept"] > stats["drop_remainder_kept"]
+    assert stats["packed_kept"] > 0.95
+    assert stats["packed_slot_util"] > stats["unpacked_slot_util"]
+
+
+# --------------------------------------------------------------- dp=8
+
+
+def test_dp8_sharded_prefetch_bit_identical(multidevice):
+    """Packed pipeline + async prefetcher under a dp=8 data mesh: batches
+    shard over `data` from the prefetch thread; prefetch on/off and the
+    single-device oracle all agree bit-exactly."""
+    out = multidevice("""
+import jax, numpy as np
+from repro.configs.base import ModelConfig, OptimizerConfig, SelectConfig, TrainConfig
+from repro.data import loader
+from repro.launch.mesh import make_data_mesh
+from repro.train.trainer import Trainer
+
+TINY = ModelConfig(name="pipe-tiny", family="dense", num_layers=2,
+                   d_model=32, num_heads=2, num_kv_heads=2, head_dim=16,
+                   d_ff=64, vocab_size=32, dtype="float32", remat="none")
+tcfg = TrainConfig(model=TINY,
+    select=SelectConfig(policy="adagradselect", k_percent=40),
+    optimizer=OptimizerConfig(lr=1e-3, schedule="constant", warmup_steps=0),
+    seq_len=64, global_batch=8, steps=4, log_every=0)
+
+def pipe():
+    return loader.make_source("packed_math", seq_len=64, global_batch=8,
+                              num_records=64)
+
+mesh = make_data_mesh()
+runs = {}
+for name, kw in (("oracle", {}),
+                 ("dp8_off", dict(mesh=mesh)),
+                 ("dp8_on", dict(mesh=mesh, prefetch_depth=3))):
+    t = Trainer(tcfg, data_source=pipe(), **kw)
+    t.train(steps=4)
+    runs[name] = (jax.tree.map(np.asarray, jax.device_get(t.state["params"])),
+                  t.data.cursor())
+
+assert runs["dp8_off"][1] == runs["dp8_on"][1] == runs["oracle"][1]
+# prefetch on/off under the SAME topology: bit-identical
+for a, b in zip(jax.tree.leaves(runs["dp8_off"][0]),
+                jax.tree.leaves(runs["dp8_on"][0])):
+    np.testing.assert_array_equal(a, b)
+# dp=8 vs the single-device oracle: numerically equal (GSPMD reduction
+# order differs in low bits — same tolerance as test_sharded_train)
+for a, b in zip(jax.tree.leaves(runs["oracle"][0]),
+                jax.tree.leaves(runs["dp8_off"][0])):
+    np.testing.assert_allclose(a, b, atol=1e-5)
+print("OK", runs["dp8_on"][1])
+""")
+    assert "OK" in out
