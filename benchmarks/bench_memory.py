@@ -10,7 +10,11 @@ Columns per method: measured device-resident bytes / host-resident bytes
 (``core.offload.resident_opt_bytes`` over ``state["opt"]``), the §3.3 model
 ``2 * P_sel * B``, and steady-state step time — the banked row's step-time
 delta vs the dense row is the host<->device moment-streaming overhead the
-paper accepts for the memory win.
+paper accepts for the memory win. Banked rows additionally break the step
+down (phase A / swap-or-dispatch / phase B host µs from
+``step_fn.swap_stats``) and report the async planner's predicted-admission
+hit rate; ``--async-swap off`` benches the synchronous boundary for
+comparison.
 
 Run directly (``python -m benchmarks.bench_memory [--json out.json]
 [--smoke]``) or through ``benchmarks/run.py`` (``--json`` there embeds this
@@ -47,7 +51,7 @@ LAST_TABLE: list | None = None
 
 
 def _tcfg(method: str, residency: str, offload_policy: str,
-          steps: int) -> TrainConfig:
+          steps: int, async_swap: bool = True) -> TrainConfig:
     return TrainConfig(
         model=MEM_MODEL, method=method,
         select=SelectConfig(k_percent=K_PERCENT,
@@ -57,28 +61,42 @@ def _tcfg(method: str, residency: str, offload_policy: str,
                                   warmup_steps=0, lora_rank=8,
                                   moment_residency=residency,
                                   offload=offload_policy,
+                                  async_swap=async_swap,
                                   total_steps=steps),
         seq_len=SEQ_LEN, global_batch=GLOBAL_BATCH, steps=steps,
         log_every=0, seed=0)
 
 
-def collect(steps: int = 30) -> list[dict]:
-    """-> one dict per method: measured residency, §3.3 model, step time."""
+def collect(steps: int = 30, async_swap: bool = True) -> list[dict]:
+    """-> one dict per method: measured residency, §3.3 model, step time;
+    banked rows add the phase breakdown + predicted-admission hit rate."""
     global LAST_TABLE
     table = []
     for name, method, residency, offload_policy in ROWS:
-        tr = Trainer(_tcfg(method, residency, offload_policy, steps))
+        tr = Trainer(_tcfg(method, residency, offload_policy, steps,
+                           async_swap))
         log = tr.train()
         res = offload.resident_opt_bytes(tr.state["opt"])
         rep = tr.method.trainable_param_report(MEM_MODEL, tr.state)
-        table.append({
+        row = {
             "name": name, "method": method, "residency": residency,
             "offload": offload_policy,
             "device_bytes": res["device"], "host_bytes": res["host"],
             "modeled_bytes": rep.opt_bytes,
             "step_time_us": float(np.mean(log.step_times[3:])) * 1e6,
             "final_loss": float(log.losses[-1]),
-        })
+        }
+        stats = getattr(tr.step_fn, "swap_stats", None)
+        if stats is not None and stats.steps:
+            row.update({
+                "async_swap": async_swap,
+                "phase_a_us": stats.phase_a_us / stats.steps,
+                "swap_us": stats.swap_us / stats.steps,
+                "phase_b_us": stats.phase_b_us / stats.steps,
+                "predicted_hit_rate": stats.predicted_hit_rate,
+                "swap_boundaries": stats.boundaries,
+            })
+        table.append(row)
     full = next(r for r in table if r["name"] == "full_ft")
     for r in table:
         r["device_vs_full"] = r["device_bytes"] / max(1, full["device_bytes"])
@@ -92,11 +110,16 @@ def run(steps: int = 30):
     """benchmarks/run.py rows: name, step_us, derived (memory columns)."""
     out = []
     for r in collect(steps):
-        out.append((f"memory/{r['name']}", r["step_time_us"],
-                    f"dev_bytes={r['device_bytes']};"
-                    f"host_bytes={r['host_bytes']};"
-                    f"dev_vs_full={r['device_vs_full']:.3f};"
-                    f"loss={r['final_loss']:.4f}"))
+        derived = (f"dev_bytes={r['device_bytes']};"
+                   f"host_bytes={r['host_bytes']};"
+                   f"dev_vs_full={r['device_vs_full']:.3f};"
+                   f"loss={r['final_loss']:.4f}")
+        if "swap_us" in r:
+            derived += (f";phase_a_us={r['phase_a_us']:.1f}"
+                        f";swap_us={r['swap_us']:.1f}"
+                        f";phase_b_us={r['phase_b_us']:.1f}"
+                        f";hit_rate={r['predicted_hit_rate']:.3f}")
+        out.append((f"memory/{r['name']}", r["step_time_us"], derived))
     return out
 
 
@@ -108,10 +131,13 @@ def main() -> int:
                     help="few steps + assert the banked residency win")
     ap.add_argument("--json", default=None,
                     help="write the memory table as JSON")
+    ap.add_argument("--async-swap", choices=("on", "off"), default="on",
+                    help="overlapped (predictive) vs synchronous banked "
+                         "swap boundary")
     args = ap.parse_args()
     steps = min(args.steps, 8) if args.smoke else args.steps
 
-    table = collect(steps)
+    table = collect(steps, async_swap=args.async_swap == "on")
     hdr = (f"{'method':24s} {'device MiB':>11s} {'host MiB':>9s} "
            f"{'model MiB':>10s} {'vs full':>8s} {'step us':>9s}")
     print(hdr)
@@ -120,6 +146,12 @@ def main() -> int:
         print(f"{r['name']:24s} {r['device_bytes']/mib:11.2f} "
               f"{r['host_bytes']/mib:9.2f} {r['modeled_bytes']/mib:10.2f} "
               f"{r['device_vs_full']:8.3f} {r['step_time_us']:9.1f}")
+        if "swap_us" in r:
+            print(f"{'':24s} phase_a={r['phase_a_us']:.0f}us "
+                  f"swap={r['swap_us']:.0f}us "
+                  f"phase_b={r['phase_b_us']:.0f}us "
+                  f"hit_rate={r['predicted_hit_rate']:.2f} "
+                  f"boundaries={r['swap_boundaries']}")
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"model": MEM_MODEL.name, "k_percent": K_PERCENT,

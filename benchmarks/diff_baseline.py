@@ -1,11 +1,16 @@
 """Diff a consolidated benchmark JSON (benchmarks/run.py --json) against the
 committed baseline and fail on regressions of the key trajectory metrics.
 
-Key metrics (direction-aware, default tolerance 20%):
+Key metrics (direction-aware, default tolerance 20%, per-metric overrides):
 
   * ``banked_device_vs_full`` — banked residency's device-resident optimizer
     bytes as a fraction of full FT (memory table; lower is better). This is
     deterministic, so any growth means the residency machinery regressed.
+  * ``banked_step_time_vs_full`` — banked step time as a multiple of the
+    full-FT step (memory table; lower is better; a ratio of two timings on
+    the same runner, so CI noise largely cancels). Tight 10% tolerance: the
+    async swap planner's whole point is keeping the boundary off the
+    critical path, and a regression here means the overlap broke.
   * ``uniform_engine_vs_legacy`` / ``staggered_engine_vs_legacy`` — the
     serve engine's tok/s (goodput) as a multiple of the legacy static-batch
     loop (serve table; higher is better). Ratios of two timings on the same
@@ -30,42 +35,48 @@ import argparse
 import json
 import sys
 
-# (name, extractor, direction, baseline_cap) — direction +1: higher is
-# better, -1: lower; baseline_cap (optional) bounds the committed baseline
-# before comparison, for metrics whose headroom is machine-dependent
+# (name, extractor, direction, baseline_cap, tolerance) — direction +1:
+# higher is better, -1: lower; baseline_cap (optional) bounds the committed
+# baseline before comparison, for metrics whose headroom is machine-
+# dependent; tolerance (optional) overrides the CLI/default tolerance for
+# that one metric
 _MEM_ROW = "adagradselect_banked"
 
 
-def _mem_ratio(payload: dict):
-    table = payload.get("memory_table") or []
-    rows = table["rows"] if isinstance(table, dict) else table
-    for row in rows or []:
-        if row.get("name") == _MEM_ROW:
-            return row.get("device_vs_full")
-    return None
+def _mem_col(col: str):
+    def extract(payload: dict):
+        table = payload.get("memory_table") or []
+        rows = table["rows"] if isinstance(table, dict) else table
+        for row in rows or []:
+            if row.get("name") == _MEM_ROW:
+                return row.get(col)
+        return None
+    return extract
 
 
 KEY_METRICS = (
-    ("banked_device_vs_full", _mem_ratio, -1, None),
+    ("banked_device_vs_full", _mem_col("device_vs_full"), -1, None, None),
+    ("banked_step_time_vs_full", _mem_col("step_time_vs_full"),
+     -1, None, 0.10),
     ("uniform_engine_vs_legacy",
      lambda p: (p.get("serve_table") or {}).get("uniform_engine_vs_legacy"),
-     +1, None),
+     +1, None, None),
     ("staggered_engine_vs_legacy",
      lambda p: (p.get("serve_table") or {}).get("staggered_engine_vs_legacy"),
-     +1, None),
+     +1, None, None),
     ("data_packed_kept",
      lambda p: (p.get("data_table") or {}).get("packed_kept"),
-     +1, None),
+     +1, None, None),
     ("data_prefetch_on_vs_off",
      lambda p: (p.get("data_table") or {}).get("prefetch_on_vs_off"),
-     +1, 1.0),
+     +1, 1.0, None),
 )
 
 
 def diff(current: dict, baseline: dict, tolerance: float = 0.20) -> list[str]:
     """-> list of human-readable regression messages (empty = pass)."""
     failures = []
-    for name, extract, direction, base_cap in KEY_METRICS:
+    for name, extract, direction, base_cap, metric_tol in KEY_METRICS:
         cur, base = extract(current), extract(baseline)
         if base is None:
             continue  # metric not in the committed baseline yet
@@ -75,12 +86,13 @@ def diff(current: dict, baseline: dict, tolerance: float = 0.20) -> list[str]:
             continue
         if base_cap is not None:
             base = min(base, base_cap)
+        tol = tolerance if metric_tol is None else metric_tol
         if direction > 0:
-            regressed = cur < base * (1.0 - tolerance)
-            verdict = f"{cur:.4f} < {base:.4f} * {1 - tolerance:.2f}"
+            regressed = cur < base * (1.0 - tol)
+            verdict = f"{cur:.4f} < {base:.4f} * {1 - tol:.2f}"
         else:
-            regressed = cur > base * (1.0 + tolerance)
-            verdict = f"{cur:.4f} > {base:.4f} * {1 + tolerance:.2f}"
+            regressed = cur > base * (1.0 + tol)
+            verdict = f"{cur:.4f} > {base:.4f} * {1 + tol:.2f}"
         status = "REGRESSION" if regressed else "ok"
         print(f"{name:32s} current={cur:10.4f} baseline={base:10.4f} "
               f"[{status}]")

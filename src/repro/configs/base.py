@@ -221,6 +221,11 @@ class OptimizerConfig:
     #     store sharded 1/dp over the mesh's data axis — requires a mesh).
     moment_residency: str = "device"  # "device" | "banked"
     offload: str = "none"          # "none" | "host" | "zero1"
+    # banked only: overlap the selection-change boundary with compute — a
+    # background thread prefetches the policy's *predicted* next admit set
+    # and writes predicted evictions back while phase B runs; mispredicts
+    # fall back to the synchronous swap (bit-identical either way).
+    async_swap: bool = True
     moment_dtype: str = "float32"  # "float32" | "bfloat16" (halves m/v HBM)
     accum_dtype: str = "float32"   # microbatch grad-accumulation buffer
     # LoRA baseline

@@ -90,6 +90,21 @@ class SelectionPolicy:
             return {**state, "cum_norms": state["cum_norms"] + block_norms}
         return state
 
+    def predict_next(self, cfg: SelectConfig, state: dict, keys: dict,
+                     num_blocks: int, k: int) -> jax.Array:
+        """Predicted mask for the NEXT ``select`` call, computed from the
+        post-select state only (the next step's gradient norms are unknown).
+
+        Default: re-run ``propose`` with zero instantaneous norms — exact
+        for every policy whose rule does not read this step's norms
+        (``random``, ``lisa``, ``all``: the PRNG keys are deterministic in
+        (key, step)), and the cumulative-signal approximation for
+        ``adagradselect``/``grass`` (their ``cum_norms`` dominates a single
+        step's norms, which is exactly the slow selection drift BlockLLM
+        exploits). Stays pure: never mutates ``state``."""
+        zeros = jnp.zeros((num_blocks,), jnp.float32)
+        return self.propose(cfg, state, keys, zeros, k, num_blocks)
+
 
 @register_policy("all")
 class FullPolicy(SelectionPolicy):
@@ -113,6 +128,12 @@ class TopKGradPolicy(SelectionPolicy):
 
     def propose(self, cfg, state, keys, block_norms, k, num_blocks):
         return selection.topk_mask(block_norms, k)
+
+    def predict_next(self, cfg, state, keys, num_blocks, k):
+        # rank-by-instantaneous-norms has no state to predict from; the best
+        # guess is that selection drifts slowly (BlockLLM's observation):
+        # predict the current mask verbatim.
+        return state["mask"]
 
 
 @register_policy("adagradselect")
@@ -235,3 +256,27 @@ def select(cfg: SelectConfig, state: dict, block_norms: jax.Array,
 def observe(cfg: SelectConfig, state: dict, block_norms: jax.Array) -> dict:
     """Feed post-backward norms to the policy without selecting (gate mode)."""
     return get_policy(cfg.policy).observe(cfg, state, block_norms)
+
+
+def predict_next(cfg: SelectConfig, state: dict,
+                 num_blocks: int) -> jax.Array:
+    """Predicted NEXT selection as a static-shape ``[k]`` indices vector
+    (same contract as ``state["indices"]``: ascending block ids padded with
+    ``num_blocks``), derived from the post-``select`` state alone.
+
+    The PRNG keys are folded exactly as the next ``select`` call will fold
+    them (``state["step"]`` was already incremented), so any policy whose
+    rule ignores the next step's gradient norms is predicted *exactly*;
+    norm-dependent policies get their cumulative-signal approximation (see
+    ``SelectionPolicy.predict_next``). Deterministic and pure in ``state`` —
+    the async swap planner prefetches the predicted admit set through this,
+    and a misprediction merely falls back to the synchronous swap."""
+    pol = get_policy(cfg.policy)
+    k = cfg.num_selected(num_blocks)
+    key = jax.random.fold_in(state["key"], state["step"])
+    k_eps, k_dir, k_gum, k_rnd = jax.random.split(key, 4)
+    keys = {"eps": k_eps, "dir": k_dir, "gum": k_gum, "rnd": k_rnd}
+    mask = pol.predict_next(cfg, state, keys, num_blocks, k)
+    mask = selection.apply_always_include(mask, cfg.always_include)
+    cap = state["indices"].shape[0] if "indices" in state else num_blocks
+    return selected_indices(mask, cap)

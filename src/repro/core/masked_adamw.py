@@ -26,6 +26,9 @@ so the dense form stays the trajectory oracle):
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -171,20 +174,34 @@ def init_banked_opt_state(partition: BlockPartition, params: dict,
     return opt
 
 
-def swap_banked(partition: BlockPartition, banks: dict, store: dict,
-                slot_map, mask):
-    """Selection-change boundary (host side, outside jit): evicted blocks'
-    bank rows stream back to the full store, admitted blocks' rows stream in
-    (zero rows on first selection). Retained blocks keep their slots, so
-    within an interval with an unchanged mask this is a no-op. ``mask``:
-    host bool [num_blocks]. Returns (banks, slot_map, store) — host (numpy)
-    store leaves are updated in place, device leaves functionally.
-    """
-    from repro.core import offload
+@dataclasses.dataclass(frozen=True)
+class GroupSwapPlan:
+    """One partition group's slice of a selection-change boundary: which
+    local blocks leave the bank (``ev_*``) and which enter (``ad_*``), with
+    the slot each occupies/receives. Pure data, computed by ``plan_swap``
+    from (slot_map, mask) alone — the async planner plans against a
+    *predicted* mask and the plan is only applied if the real selection
+    matches, so nothing here may depend on bank/store contents."""
+    key: str
+    start: int
+    length: int
+    stacked: bool
+    ev_blocks: np.ndarray  # local block ids leaving the bank
+    ev_slots: np.ndarray   # the bank rows they occupied
+    ad_blocks: np.ndarray  # local block ids entering the bank
+    ad_slots: np.ndarray   # the (free) bank rows they receive
+
+
+def plan_swap(partition: BlockPartition, slot_map, mask,
+              caps: dict) -> list[GroupSwapPlan]:
+    """Evict/admit plan for one boundary. ``mask``: host bool [num_blocks];
+    ``caps``: per-group bank capacity (``{key: bank["slots"].shape[0]}``).
+    Groups whose residency already matches the mask are omitted (an
+    unchanged selection plans to an empty list — the no-op fast path).
+    Raises on per-group bank overflow, same as the paper's slot contract."""
     mask = np.asarray(mask).astype(bool)
-    slot_map = np.array(slot_map, np.int32)  # fresh copy per boundary
-    new_banks = dict(banks)
-    new_store = dict(store)
+    slot_map = np.asarray(slot_map, np.int32)
+    plans = []
     for g in partition.groups:
         lo = slice(g.start, g.start + g.length)
         gmask, gslots = mask[lo], slot_map[lo]
@@ -193,10 +210,7 @@ def swap_banked(partition: BlockPartition, banks: dict, store: dict,
         ad_blocks = np.nonzero(gmask & ~resident)[0]
         if not len(ev_blocks) and not len(ad_blocks):
             continue
-        bank = banks[g.key]
-        slots_vec = np.array(bank["slots"], np.int32)
-        cap = slots_vec.shape[0]
-        ev_slots = gslots[ev_blocks]
+        cap = caps[g.key]
         occupied = np.zeros((cap,), bool)
         occupied[gslots[np.nonzero(resident & gmask)[0]]] = True
         free = np.nonzero(~occupied)[0]
@@ -206,44 +220,198 @@ def swap_banked(partition: BlockPartition, banks: dict, store: dict,
                 f"admissions for {len(free)} free slots (capacity {cap}); "
                 f"the selection selected more blocks than the configured "
                 f"slot capacity")
-        ad_slots = free[:len(ad_blocks)]
+        plans.append(GroupSwapPlan(
+            key=g.key, start=g.start, length=g.length, stacked=g.stacked,
+            ev_blocks=ev_blocks, ev_slots=gslots[ev_blocks],
+            ad_blocks=ad_blocks, ad_slots=free[:len(ad_blocks)]))
+    return plans
 
-        group_bank, group_store = {}, {}
+
+def bank_caps(banks: dict) -> dict:
+    """{group key: bank slot capacity} for ``plan_swap``."""
+    return {k: int(b["slots"].shape[0]) for k, b in banks.items()}
+
+
+# boundary traffic is a handful of rows across ~20 bank leaves; fusing the
+# whole group into one jitted call keeps it to one dispatch (and one compile
+# per (group, row-count) pair) instead of one per leaf
+@jax.jit
+def _gather_group(leaves, slots):
+    return tuple(l.at[slots].get(mode="fill", fill_value=0) for l in leaves)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_group_donated(leaves, slots, rows):
+    return tuple(l.at[slots].set(r.astype(l.dtype), mode="drop")
+                 for l, r in zip(leaves, rows))
+
+
+def writeback_evictions(plans: list, banks: dict, store: dict) -> dict:
+    """Stream evicted blocks' bank rows back into the full store
+    (device -> store side). Reads the banks — so in the overlapped timeline
+    this runs only after phase B's bank output is ready (device_get blocks
+    on it, which is exactly the background thread's job). Host (numpy)
+    store leaves are updated in place; device leaves functionally. Returns
+    the (possibly new) store tree. Admitted blocks' store rows are disjoint
+    from evicted ones, so this commutes with ``prefetch_admissions``."""
+    from repro.core import offload
+    new_store = dict(store)
+    # dispatch every device-side row gather first (one fused call per
+    # group), then fetch them all with one batched device_get: a single
+    # host sync per boundary instead of a blocking round trip per bank leaf
+    dev = []
+    for plan in plans:
+        if not len(plan.ev_blocks):
+            continue
+        bank = banks[plan.key]
+        leaves = tuple(jax.tree.leaves(bank["m"]) + jax.tree.leaves(bank["v"]))
+        if plan.stacked:
+            dev.extend(_gather_group(leaves,
+                                     jnp.asarray(plan.ev_slots, jnp.int32)))
+        else:
+            dev.extend(leaves)
+    host = iter(jax.device_get(dev))
+    for plan in plans:
+        if not len(plan.ev_blocks):
+            continue
+        group_store = {}
         for mom in ("m", "v"):
-            b_flat, b_def = jax.tree.flatten(bank[mom])
-            s_flat, s_def = jax.tree.flatten(store[g.key][mom])
-            out_b, out_s = [], []
-            for bl, sl in zip(b_flat, s_flat):
-                if g.stacked:
-                    if len(ev_blocks):
-                        rows = np.asarray(part_mod.gather_rows(bl, ev_slots))
-                        sl = offload.store_write_rows(sl, ev_blocks, rows)
-                    if len(ad_blocks):
-                        rows = offload.store_read_rows(sl, ad_blocks)
-                        new_bl = part_mod.scatter_rows(bl, ad_slots,
-                                                       jnp.asarray(rows))
-                        bl = offload._keep_sharding(new_bl, bl)
-                else:  # the single block's moments are the whole leaf
-                    if len(ev_blocks):
-                        sl = offload.store_write_leaf(sl, np.asarray(bl))
-                    if len(ad_blocks):
-                        bl = offload._keep_sharding(
-                            jnp.asarray(np.asarray(sl),
-                                        dtype=np.asarray(bl).dtype), bl)
-                out_b.append(bl)
+            s_flat, s_def = jax.tree.flatten(store[plan.key][mom])
+            out_s = []
+            for sl in s_flat:
+                rows = next(host)
+                if plan.stacked:
+                    sl = offload.store_write_rows(sl, plan.ev_blocks, rows)
+                else:
+                    sl = offload.store_write_leaf(sl, rows)
                 out_s.append(sl)
-            group_bank[mom] = jax.tree.unflatten(b_def, out_b)
             group_store[mom] = jax.tree.unflatten(s_def, out_s)
+        new_store[plan.key] = group_store
+    return new_store
 
-        slots_vec[ev_slots] = g.length
-        slots_vec[ad_slots] = ad_blocks
-        slot_map[g.start + ev_blocks] = -1
-        slot_map[g.start + ad_blocks] = ad_slots
+
+def prefetch_admissions(plans: list, store: dict, staging=None) -> dict:
+    """Stage admitted blocks' store rows as device arrays, ready to scatter
+    into bank slots at commit. Reads only *non-resident* blocks' store rows,
+    which cannot change while a selection is in flight — so this is safe to
+    run any time after the plan exists, concurrent with phase B (the
+    overlapped path's store->device prefetch). ``staging``: optional
+    reusable host buffer pool (``core.swap.StagingPool``) so host-store
+    reads don't allocate fresh numpy staging on every boundary. Returns
+    ``{key: {"m": [rows per leaf], "v": [...]}}`` in tree-flatten order."""
+    from repro.core import offload
+    staged = {}
+    pooled = []
+    for plan in plans:
+        if not len(plan.ad_blocks):
+            continue
+        group = {}
+        for mom in ("m", "v"):
+            s_flat, _ = jax.tree.flatten(store[plan.key][mom])
+            rows_out = []
+            for i, sl in enumerate(s_flat):
+                if plan.stacked:
+                    if isinstance(sl, np.ndarray):
+                        buf = (staging.take(plan.key, mom, i,
+                                            len(plan.ad_blocks), sl)
+                               if staging is not None else None)
+                        rows = offload.store_read_rows(sl, plan.ad_blocks,
+                                                       out=buf)
+                        dev = jax.device_put(rows)
+                        if buf is not None:
+                            pooled.append(dev)
+                    else:
+                        dev = offload.store_read_rows(sl, plan.ad_blocks)
+                else:
+                    dev = (jax.device_put(sl) if isinstance(sl, np.ndarray)
+                           else jnp.asarray(sl))
+                rows_out.append(dev)
+            group[mom] = rows_out
+        staged[plan.key] = group
+    if pooled:
+        # pool buffers are reused next boundary; one sync for all transfers
+        # (not one per leaf) makes sure every transfer has read its buffer
+        jax.block_until_ready(pooled)
+    return staged
+
+
+def commit_swap(plans: list, banks: dict, store: dict, slot_map,
+                staged: dict, donate: bool = False):
+    """Apply a planned boundary: scatter staged admissions into bank rows,
+    mark evicted slots free, update ``slot_map``. Device work is a handful
+    of async scatter dispatches — with admissions prefetched and evictions
+    written back in the background, this is all that remains on the
+    critical path. ``donate=True`` donates the scattered bank leaves (rows
+    written in place instead of copying the whole bank) — only for callers
+    that drop their last reference to the input banks, i.e. the swap
+    planner's per-step boundary. Returns (banks, slot_map, store)."""
+    from repro.core import offload
+    slot_map = np.array(slot_map, np.int32)  # fresh copy per boundary
+    new_banks = dict(banks)
+    for plan in plans:
+        bank = banks[plan.key]
+        slots_vec = np.array(bank["slots"], np.int32)
+        group_bank = {}
+        if donate and plan.stacked and len(plan.ad_blocks):
+            # fused path: all of the group's m+v leaves in one donated
+            # scatter call — staged rows land in place, no bank copies
+            m_flat, m_def = jax.tree.flatten(bank["m"])
+            v_flat, v_def = jax.tree.flatten(bank["v"])
+            old = m_flat + v_flat
+            rows = tuple(jnp.asarray(r) for r in
+                         staged[plan.key]["m"] + staged[plan.key]["v"])
+            new = _scatter_group_donated(
+                tuple(old), jnp.asarray(plan.ad_slots, jnp.int32), rows)
+            new = [offload._keep_sharding(n, o) for n, o in zip(new, old)]
+            group_bank["m"] = jax.tree.unflatten(m_def, new[:len(m_flat)])
+            group_bank["v"] = jax.tree.unflatten(v_def, new[len(m_flat):])
+        else:
+            for mom in ("m", "v"):
+                b_flat, b_def = jax.tree.flatten(bank[mom])
+                rows = staged.get(plan.key, {}).get(mom)
+                out_b = []
+                for i, bl in enumerate(b_flat):
+                    if len(plan.ad_blocks):
+                        if plan.stacked:
+                            new_bl = part_mod.scatter_rows(
+                                bl, plan.ad_slots,
+                                jnp.asarray(rows[i], dtype=bl.dtype))
+                        else:
+                            new_bl = jnp.asarray(rows[i], dtype=bl.dtype)
+                        bl = offload._keep_sharding(new_bl, bl)
+                    out_b.append(bl)
+                group_bank[mom] = jax.tree.unflatten(b_def, out_b)
+        slots_vec[plan.ev_slots] = plan.length
+        slots_vec[plan.ad_slots] = plan.ad_blocks
+        slot_map[plan.start + plan.ev_blocks] = -1
+        slot_map[plan.start + plan.ad_blocks] = plan.ad_slots
         group_bank["slots"] = offload._keep_sharding(jnp.asarray(slots_vec),
                                                      bank["slots"])
-        new_banks[g.key] = group_bank
-        new_store[g.key] = group_store
-    return new_banks, slot_map, new_store
+        new_banks[plan.key] = group_bank
+    return new_banks, slot_map, store
+
+
+def swap_banked(partition: BlockPartition, banks: dict, store: dict,
+                slot_map, mask, staging=None):
+    """Selection-change boundary (host side, outside jit): evicted blocks'
+    bank rows stream back to the full store, admitted blocks' rows stream in
+    (zero rows on first selection). Retained blocks keep their slots, so
+    within an interval with an unchanged mask this is a no-op. ``mask``:
+    host bool [num_blocks]. Returns (banks, slot_map, store) — host (numpy)
+    store leaves are updated in place, device leaves functionally.
+
+    This is the synchronous composition of the boundary's phases —
+    ``plan_swap`` -> ``prefetch_admissions`` -> ``writeback_evictions`` ->
+    ``commit_swap``. The async planner (core/swap.py) runs the first three
+    in the background against the *predicted* next selection while phase B
+    and the next phase A compute, leaving only ``commit_swap`` on the
+    critical path when the prediction hits."""
+    plans = plan_swap(partition, slot_map, mask, bank_caps(banks))
+    if not plans:
+        return dict(banks), np.array(slot_map, np.int32), dict(store)
+    staged = prefetch_admissions(plans, store, staging)
+    store = writeback_evictions(plans, banks, store)
+    return commit_swap(plans, banks, store, slot_map, staged)
 
 
 def banked_update(cfg: OptimizerConfig, partition: BlockPartition,
@@ -271,13 +439,21 @@ def banked_update(cfg: OptimizerConfig, partition: BlockPartition,
             cnt = counts[gids]
 
             def upd(p, gr, m, v):
+                if use_pallas and p.ndim >= 2:
+                    # fused path: the kernel fetches p/g rows through the
+                    # slots vector (scalar prefetch) — no [cap, ...] gather
+                    # of p or g is materialized, only the compact outputs.
+                    from repro.kernels import ops as kops
+                    p2, m2, v2 = kops.banked_masked_adamw(
+                        p, gr, m, v, slots, sel, cnt, lr, cfg.b1, cfg.b2,
+                        cfg.eps, cfg.weight_decay)
+                    return part_mod.scatter_rows(p, slots, p2), m2, v2
                 p_rows = part_mod.gather_rows(p, slots)
                 g_rows = part_mod.gather_rows(gr, slots)
                 shp = (sel.shape[0],) + (1,) * (p_rows.ndim - 1)
-                pallas_ok = use_pallas and p_rows.ndim >= 2
                 p2, m2, v2 = _adamw_rows(cfg, p_rows, g_rows, m, v,
                                          sel.reshape(shp), cnt.reshape(shp),
-                                         lr, pallas_ok)
+                                         lr, False)
                 # free-slot sentinels (slots == g.length) are dropped
                 return part_mod.scatter_rows(p, slots, p2), m2, v2
 

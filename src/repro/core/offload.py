@@ -148,9 +148,18 @@ def store_write_rows(leaf, blocks, rows):
     return _keep_sharding(new, leaf)
 
 
-def store_read_rows(leaf, blocks):
-    """Rows of a stacked store leaf for admission into bank slots."""
+def store_read_rows(leaf, blocks, out=None):
+    """Rows of a stacked store leaf for admission into bank slots.
+
+    ``out``: optional preallocated numpy staging buffer (first dim >=
+    ``len(blocks)``) for host-store reads — the swap planner reuses pinned
+    staging across boundaries instead of allocating per swap. Ignored for
+    device-resident leaves (the read is a device-side gather there)."""
     if isinstance(leaf, np.ndarray):
+        if out is not None:
+            view = out[:len(blocks)]
+            np.take(leaf, blocks, axis=0, out=view)
+            return view
         return leaf[blocks]
     return jnp.asarray(leaf)[jnp.asarray(blocks)]
 

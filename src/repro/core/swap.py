@@ -1,0 +1,230 @@
+"""Async double-buffered moment streaming for banked residency.
+
+The synchronous banked step pays a host boundary between its two compiled
+phases: ``swap_banked`` plans the evict/admit sets, stages admissions out of
+the full store, and waits for evicted bank rows — all while the device
+idles. GRASS (PAPERS.md) hides the analogous projected-gradient traffic by
+overlapping it with compute; BlockLLM leans on selections drifting slowly
+between steps. ``SwapPlanner`` combines both ideas:
+
+* after step t's apply (phase B) has been *dispatched*, the planner asks the
+  selection policy where step t+1 will land (``adagradselect.predict_next``
+  — exact for schedule/PRNG-driven policies, the cumulative-signal
+  approximation for norm-driven ones) and hands the boundary work to a
+  single background thread: plan against the predicted mask, prefetch the
+  predicted admit rows store->device into staging, and write predicted
+  evictions back device->store (the ``np.asarray`` on bank rows blocks on
+  phase B's output *inside the thread*, which is exactly the overlap).
+  On a multi-device mesh the job runs *inline* on the dispatching thread
+  instead — sharded store reads carry collectives, which deadlock if two
+  threads enqueue them concurrently — still after phase B's async dispatch;
+* at step t+1's boundary ``resolve`` joins the thread. If the prediction
+  matched the real selection (all-or-nothing on the [k] indices vector),
+  only ``commit_swap`` remains on the critical path — and it donates the
+  scattered bank leaves, so XLA writes the staged rows in place instead of
+  copying each bank. A miss falls back to the synchronous ``swap_banked``
+  and is counted (``SwapStats.predicted_hit_rate``).
+
+Why the overlap cannot corrupt state:
+
+* admitted blocks are non-resident, so their store rows are frozen while
+  the prediction is in flight — prefetch reads stable data;
+* predicted evictions write the post-phase-B bank values of *resident*
+  blocks; on a mispredict the store rows written are for blocks whose
+  authoritative copy is still the bank, so the write is inert (the sync
+  fallback re-writes the real evictions);
+* evict and admit sets of one boundary are disjoint, so writeback and
+  prefetch commute;
+* ``resolve``/``quiesce`` join the thread before the next apply donates the
+  bank buffers the writeback reads, and before checkpointing snapshots the
+  store.
+
+``StagingPool`` keeps the host-side staging buffers (admission reads out of
+a host store) alive across boundaries instead of allocating per swap — the
+same pool serves the background path and the synchronous fallback.
+"""
+from __future__ import annotations
+
+import dataclasses
+from concurrent.futures import ThreadPoolExecutor
+
+import jax
+import numpy as np
+
+from repro.core import adagradselect
+from repro.core import masked_adamw as ma
+
+
+class StagingPool:
+    """Reusable numpy staging buffers for host-store admission reads, keyed
+    by (group, moment, leaf index) and grown to the high-water row count.
+    ``prefetch_admissions`` blocks on the device transfer before a buffer
+    can be handed out again, so a single-slot pool per leaf is enough."""
+
+    def __init__(self):
+        self._bufs: dict = {}
+
+    def take(self, key: str, mom: str, leaf_idx: int, n: int,
+             leaf: np.ndarray) -> np.ndarray:
+        k = (key, mom, leaf_idx)
+        buf = self._bufs.get(k)
+        shape = (n,) + leaf.shape[1:]
+        if buf is None or buf.shape[0] < n or buf.shape[1:] != leaf.shape[1:] \
+                or buf.dtype != leaf.dtype:
+            buf = np.empty(shape, leaf.dtype)
+            self._bufs[k] = buf
+        return buf
+
+    def nbytes(self) -> int:
+        return sum(b.nbytes for b in self._bufs.values())
+
+
+@dataclasses.dataclass
+class SwapStats:
+    """Boundary accounting + step-phase timing for the banked driver.
+    ``boundaries`` counts selection changes that required bank traffic;
+    ``predicted_hits`` those fully absorbed by the background dispatch;
+    ``sync_swaps`` the fallback (mispredict, overflow-on-predicted-plan, or
+    async disabled). Timing fields are host-side wall time accumulated by
+    the two-phase driver: ``phase_a_us`` includes the forward/select device
+    wait (the indices sync), ``swap_us`` the boundary resolve+commit (or the
+    full synchronous swap), ``phase_b_us`` the apply + dispatch issue."""
+    steps: int = 0
+    boundaries: int = 0
+    predicted_hits: int = 0
+    sync_swaps: int = 0
+    dispatches: int = 0
+    phase_a_us: float = 0.0
+    swap_us: float = 0.0
+    phase_b_us: float = 0.0
+
+    @property
+    def predicted_hit_rate(self) -> float:
+        return self.predicted_hits / self.boundaries if self.boundaries else 1.0
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["predicted_hit_rate"] = self.predicted_hit_rate
+        return d
+
+
+class SwapPlanner:
+    """Owns the background boundary work for one banked trainer. At most one
+    job is ever in flight; ``resolve`` (or ``quiesce``) joins it before any
+    state the job reads can be donated, checkpointed, or mutated."""
+
+    def __init__(self, partition, select_cfg, num_blocks: int,
+                 enabled: bool = True, inline: bool = False):
+        self.partition = partition
+        self.num_blocks = num_blocks
+        self.enabled = enabled
+        # On a multi-device mesh the job's store/bank reads are sharded, so
+        # they lower to collective-bearing XLA computations. Collectives
+        # rendezvous by enqueue order; a second thread issuing them while
+        # phase B's collectives are in flight can interleave participants
+        # from different executions and deadlock. ``inline`` runs the job on
+        # the dispatching thread instead — one enqueue order, and the device
+        # still overlaps because phase B was already dispatched async.
+        self.inline = inline
+        self.staging = StagingPool()
+        self.stats = SwapStats()
+        self._pool: ThreadPoolExecutor | None = None
+        self._pending = None  # Future | dict -> dict | None
+        self._predict = jax.jit(
+            lambda st: adagradselect.predict_next(select_cfg, st, num_blocks))
+
+    # ------------------------------------------------------------ dispatch
+
+    def dispatch(self, sel_state: dict, banks: dict, store: dict,
+                 slot_map) -> None:
+        """Kick off the predicted boundary for the *next* step. Call after
+        this step's apply has been dispatched: the job's device reads block
+        on apply's outputs in the background thread, not on the main one.
+        No-op (beyond the prediction) when async streaming is disabled."""
+        if not self.enabled or self._pending is not None:
+            return
+        pred_idx = self._predict(sel_state)  # async device dispatch
+        caps = ma.bank_caps(banks)
+        slot_map = np.array(slot_map, np.int32)  # snapshot: host-global map
+
+        def job():
+            idx = np.asarray(pred_idx)
+            mask = np.zeros((self.num_blocks,), bool)
+            mask[idx[idx < self.num_blocks]] = True
+            try:
+                plans = ma.plan_swap(self.partition, slot_map, mask, caps)
+            except RuntimeError:
+                # predicted selection overflows the banks — the real one may
+                # not (or will raise on the sync path with full context)
+                return {"idx": idx, "failed": True}
+            staged = ma.prefetch_admissions(plans, store, self.staging)
+            new_store = ma.writeback_evictions(plans, banks, store)
+            return {"idx": idx, "failed": False, "plans": plans,
+                    "staged": staged, "store": new_store}
+
+        if self.inline:
+            self._pending = job()
+        else:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=1, thread_name_prefix="swap-planner")
+            self._pending = self._pool.submit(job)
+        self.stats.dispatches += 1
+
+    # ------------------------------------------------------------- resolve
+
+    def resolve(self, indices, banks: dict, store: dict, slot_map):
+        """The selection-change boundary for the *actual* indices of this
+        step. Joins any in-flight dispatch; on an exact prediction hit only
+        ``commit_swap`` runs here — with the bank leaves *donated*, so the
+        staged rows are written in place rather than copying each bank.
+        Donation is safe exactly here: the caller hands over its banks and
+        uses only the returned ones, and the joined job was the last other
+        reader. A miss falls back to the synchronous ``swap_banked`` path
+        (same donation, pooled staging). Returns (banks, slot_map, store)."""
+        idx = np.asarray(indices)
+        job = self._take_pending()
+        if job is not None and not job["failed"] \
+                and np.array_equal(job["idx"], idx):
+            if job["plans"]:  # unchanged selections are not boundaries
+                self.stats.boundaries += 1
+                self.stats.predicted_hits += 1
+            return ma.commit_swap(job["plans"], banks, job["store"],
+                                  slot_map, job["staged"], donate=True)
+        if job is not None:
+            # keep the job's store: predicted-eviction writebacks are inert
+            # for still-resident blocks and identical for real evictions
+            store = job["store"] if not job["failed"] else store
+        mask = np.zeros((self.num_blocks,), bool)
+        mask[idx[idx < self.num_blocks]] = True
+        plans = ma.plan_swap(self.partition, slot_map, mask,
+                             ma.bank_caps(banks))
+        if not plans:
+            return dict(banks), np.array(slot_map, np.int32), dict(store)
+        self.stats.boundaries += 1
+        self.stats.sync_swaps += 1
+        staged = ma.prefetch_admissions(plans, store, self.staging)
+        store = ma.writeback_evictions(plans, banks, store)
+        return ma.commit_swap(plans, banks, store, slot_map, staged,
+                              donate=True)
+
+    # ------------------------------------------------------------- barrier
+
+    def quiesce(self) -> None:
+        """Join and discard any in-flight dispatch. Must run before
+        checkpointing (the job holds references into banks/store) and at
+        the end of training. Discarding loses nothing: staged admissions
+        are re-derivable and predicted-eviction writebacks are inert."""
+        self._take_pending()
+
+    def close(self) -> None:
+        self.quiesce()
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+    def _take_pending(self):
+        job, self._pending = self._pending, None
+        if job is None or isinstance(job, dict):  # inline jobs store results
+            return job
+        return job.result()

@@ -7,6 +7,18 @@ update in one VMEM pass. The per-block mask and bias-correction count enter
 as per-layer (1, 1) blocks.
 
 Grid: (L, R / CHUNK) over stacked [L, R] leaves.
+
+``banked_masked_adamw`` is the banked-residency variant (paper §3.3): the
+moments are compact [cap]-row banks and the parameter/gradient rows are
+addressed *through the [cap] slots vector* with scalar prefetch
+(``PrefetchScalarGridSpec``) — the grid walks bank rows and the p/g index
+maps dereference ``slots[i]`` to pick the full-leaf row, so the former
+``gather_rows -> masked_adamw -> scatter_rows`` chain collapses into one
+kernel and the two materialized [cap, R] copies of p and g disappear.
+Sentinel slots (``slots[i] >= L``, unfilled bank rows) are clamped to a
+real row for the fetch and neutralized by ``sel == 0`` (the masked update
+is the identity there); the compact p output for those rows is dropped by
+the caller's ``scatter_rows(..., mode="drop")``.
 """
 from __future__ import annotations
 
@@ -14,6 +26,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 CHUNK = 2048
 
@@ -62,3 +75,67 @@ def masked_adamw(p, g, m, v, sel, counts, lr, b1, b2, eps, wd, *,
                    jax.ShapeDtypeStruct((l, r), jnp.float32)),
         interpret=interpret,
     )(*scalars, p, g, m, v, sel2, cnt2)
+
+
+def _banked_kernel(slots_ref, lr_ref, b1_ref, b2_ref, eps_ref, wd_ref,
+                   p_ref, g_ref, m_ref, v_ref, sel_ref, cnt_ref,
+                   po_ref, mo_ref, vo_ref):
+    # identical arithmetic to _kernel; the slots vector only steers the p/g
+    # BlockSpec index maps (scalar prefetch), it is never read in the body.
+    del slots_ref
+    lr, b1, b2 = lr_ref[0], b1_ref[0], b2_ref[0]
+    eps, wd = eps_ref[0], wd_ref[0]
+    sel = sel_ref[0, 0] > 0
+    c = jnp.maximum(cnt_ref[0, 0], 1.0)
+    g = g_ref[...].astype(jnp.float32)
+    m, v = m_ref[...], v_ref[...]
+    p = p_ref[...].astype(jnp.float32)
+    m2 = jnp.where(sel, b1 * m + (1 - b1) * g, m)
+    v2 = jnp.where(sel, b2 * v + (1 - b2) * g * g, v)
+    mhat = m2 / (1 - b1 ** c)
+    vhat = v2 / (1 - b2 ** c)
+    step = lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+    po_ref[...] = jnp.where(sel, p - step, p).astype(po_ref.dtype)
+    mo_ref[...] = m2
+    vo_ref[...] = v2
+
+
+def banked_masked_adamw(p, g, m, v, slots, sel, counts,
+                        lr, b1, b2, eps, wd, *, interpret: bool = True):
+    """Fused gather -> masked AdamW -> (compact) update over bank rows.
+
+    p, g: [L, R] full stacked leaves; m, v: [cap, R] f32 moment banks;
+    slots: [cap] i32 bank->leaf row map (``>= L`` marks an unfilled slot);
+    sel, counts: [cap] per-slot (sel must already be 0 for sentinel slots).
+    Returns (p_rows' [cap, R], m' [cap, R], v' [cap, R]) — the caller
+    scatters p_rows' back with drop-mode OOB semantics. Grid walks
+    (cap, R/CHUNK); p/g blocks are addressed via ``slots[i]`` through
+    scalar prefetch, sentinels clamped to row L-1 (fetch-only: sel == 0
+    makes the update an identity and the scatter drops the row)."""
+    l, r = p.shape
+    cap = m.shape[0]
+    assert r % CHUNK == 0, (r, CHUNK)
+    scalars = [jnp.asarray(x, jnp.float32).reshape(1)
+               for x in (lr, b1, b2, eps, wd)]
+    sel2 = sel.astype(jnp.float32).reshape(cap, 1)
+    cnt2 = counts.astype(jnp.float32).reshape(cap, 1)
+    grid = (cap, r // CHUNK)
+    row_spec = pl.BlockSpec((1, CHUNK),
+                            lambda i, j, s: (jnp.minimum(s[i], l - 1), j))
+    bank_spec = pl.BlockSpec((1, CHUNK), lambda i, j, s: (i, j))
+    lspec = pl.BlockSpec((1, 1), lambda i, j, s: (i, 0))
+    sspec = pl.BlockSpec((1,), lambda i, j, s: (0,))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[sspec] * 5 + [row_spec] * 2 + [bank_spec] * 2
+                 + [lspec, lspec],
+        out_specs=(bank_spec, bank_spec, bank_spec))
+    return pl.pallas_call(
+        _banked_kernel,
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((cap, r), p.dtype),
+                   jax.ShapeDtypeStruct((cap, r), jnp.float32),
+                   jax.ShapeDtypeStruct((cap, r), jnp.float32)),
+        interpret=interpret,
+    )(jnp.asarray(slots, jnp.int32), *scalars, p, g, m, v, sel2, cnt2)

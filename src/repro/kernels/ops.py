@@ -55,6 +55,30 @@ def masked_adamw(p, g, m, v, sel, counts, lr, b1, b2, eps, wd):
     return unpad(p2), m2[:, :r_orig].reshape(shape), v2[:, :r_orig].reshape(shape)
 
 
+def banked_masked_adamw(p, g, m, v, slots, sel, counts, lr, b1, b2, eps, wd):
+    """Banked (slot-indexed) masked AdamW. p, g: [L, ...] full stacked
+    leaves; m, v: [cap, ...] moment banks; slots/sel/counts: [cap] (sel == 0
+    on sentinel slots). Returns (p_rows', m', v') in bank shape [cap, ...] —
+    scatter p_rows' back into the leaf with drop-mode semantics. The kernel
+    reads p/g rows through the slots vector (scalar prefetch), so no
+    [cap, ...] gather of p or g is ever materialized."""
+    shape = p.shape
+    cap = m.shape[0]
+    sel1 = sel.reshape(cap)
+    cnt1 = counts.reshape(cap)
+    pf, gf = _pad_flat(p, _ma.CHUNK), _pad_flat(g, _ma.CHUNK)
+    mf, vf = _pad_flat(m, _ma.CHUNK), _pad_flat(v, _ma.CHUNK)
+    r_orig = 1
+    for d in shape[1:]:
+        r_orig *= d
+    p2, m2, v2 = _ma.banked_masked_adamw(pf, gf, mf, vf, slots, sel1, cnt1,
+                                         lr, b1, b2, eps, wd,
+                                         interpret=_interpret())
+    bank_shape = (cap,) + shape[1:]
+    unpad = lambda t: t[:, :r_orig].reshape(bank_shape)  # noqa: E731
+    return unpad(p2), unpad(m2), unpad(v2)
+
+
 def flash_attention(q, k, v, *, causal=True, segment_ids=None):
     """q,k,v: [B, S, H, D] (layer layout; kv already head-expanded) ->
     [B, S, H, D]. ``segment_ids``: optional [B, S] packed segment ids

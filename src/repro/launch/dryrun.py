@@ -129,6 +129,13 @@ def _opt_memory(cfg, method, sel_cfg, state_sds) -> dict:
         "model_pct_reduction": rep.pct_reduction,
         "measured_bytes": rep.mem_measured_device + rep.mem_measured_host,
         "banked_resident_bytes": tree_bytes(banked),
+        # store<->bank traffic of one worst-case selection-change boundary
+        # (full slot turnover: k admissions streamed in + k evictions
+        # written back = 2 directions x m+v of the k largest blocks). This
+        # is the per-interval transfer the async swap planner hides behind
+        # compute; amortize over the policy's reselection interval for
+        # bytes/step.
+        "swap_bytes_per_interval": 2 * rep.mem_selective,
     }
 
 
@@ -199,7 +206,9 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, *,
                       f"(full {om['model_full_bytes']/gb:.2f}GiB, "
                       f"-{om['model_pct_reduction']:.0f}%) "
                       f"measured={om['measured_bytes']/gb:.2f}GiB "
-                      f"banked-resident={om['banked_resident_bytes']/gb:.2f}GiB")
+                      f"banked-resident={om['banked_resident_bytes']/gb:.2f}GiB "
+                      f"swap/interval="
+                      f"{om['swap_bytes_per_interval']/gb:.2f}GiB")
     except Exception as e:  # noqa: BLE001 — report failures per-cell
         result["status"] = "error"
         result["error"] = f"{type(e).__name__}: {e}"

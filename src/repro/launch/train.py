@@ -62,6 +62,14 @@ def main():
                          "a full store placed per --offload (paper 3.3); "
                          "banked + --offload zero1 shards the store 1/dp "
                          "over the mesh's data axis and requires --mesh")
+    ap.add_argument("--async-swap", default="on", choices=["on", "off"],
+                    help="banked only: 'on' overlaps the selection-change "
+                         "boundary with compute (a background thread "
+                         "prefetches the policy's predicted next admit set "
+                         "and writes predicted evictions back while phase B "
+                         "runs; mispredictions fall back to the synchronous "
+                         "swap — the trajectory is bit-identical either "
+                         "way); 'off' forces every boundary synchronous")
     ap.add_argument("--mesh", default=None,
                     choices=[None, "single", "multi", "tiny", "data"],
                     help="run data-parallel (or DP x TP) on a device mesh: "
@@ -94,6 +102,7 @@ def main():
         optimizer=OptimizerConfig(lr=args.lr, total_steps=args.steps,
                                   offload=args.offload,
                                   moment_residency=args.moment_residency,
+                                  async_swap=args.async_swap == "on",
                                   lora_rank=args.lora_rank),
         seq_len=args.seq_len, global_batch=args.global_batch,
         steps=args.steps, seed=args.seed,

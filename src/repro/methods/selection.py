@@ -15,11 +15,18 @@ Two optimizer-state residency layouts (``opt_cfg.moment_residency``):
   "counts", "store"}`` — only selected blocks' moments are device-resident,
   in compact [k]-slot banks backed by a full store (host RAM under
   ``opt_cfg.offload == "host"``). The step is two compiled phases around a
-  host-side swap: phase A (forward + backward + in-jit selection) yields the
-  mask, ``masked_adamw.swap_banked`` streams evicted/admitted blocks'
-  moments store<->banks, phase B applies the banked AdamW on bank rows
-  (Pallas fused path included). Both phases compile exactly once — bank
-  slots and selected indices are runtime vectors of static shape.
+  selection-change boundary: phase A (forward + backward + in-jit
+  selection) yields the mask, the boundary streams evicted/admitted
+  blocks' moments store<->banks, phase B applies the banked AdamW on bank
+  rows (fused slot-indexed Pallas path included). Under
+  ``opt_cfg.async_swap`` (default) the boundary is overlapped: a
+  ``core.swap.SwapPlanner`` prefetches the *predicted* next admit set and
+  writes predicted evictions back in a background thread while phase B
+  runs, so a correct prediction leaves only the bank commit on the
+  critical path and a miss falls back to the synchronous swap
+  (``step_fn.swap_stats.predicted_hit_rate``). Both phases compile exactly
+  once — bank slots and selected indices are runtime vectors of static
+  shape, identical with the async bit on or off.
 
 With ``model_cfg.gate_weight_grads`` the mask is decided BEFORE backward
 from the policy's cumulative signal and frozen blocks' weight grads are
@@ -29,6 +36,7 @@ lax.cond-gated away (DESIGN 3.3); the observed norms are then fed back via
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -37,7 +45,7 @@ import numpy as np
 from repro.configs.base import (ModelConfig, OptimizerConfig, SelectConfig,
                                 TrainConfig)
 from repro.core import (adagradselect, masked_adamw, offload,
-                        partition as part_mod)
+                        partition as part_mod, swap as swap_mod)
 from repro.core.offload import optimizer_memory_report
 from repro.methods import registry
 from repro.methods.base import TrainableReport
@@ -224,7 +232,7 @@ class SelectionMethod:
             return self._make_banked_step(
                 opt_cfg, partition, forward_select, step_metrics,
                 use_pallas=use_pallas, donate=donate,
-                state_shardings=state_shardings)
+                state_shardings=state_shardings, mesh=mesh)
         if opt_cfg.moment_residency != "device":
             raise ValueError(
                 f"unknown moment_residency {opt_cfg.moment_residency!r}")
@@ -246,7 +254,7 @@ class SelectionMethod:
 
     def _make_banked_step(self, opt_cfg, partition, forward_select,
                           step_metrics, *, use_pallas, donate,
-                          state_shardings=None):
+                          state_shardings=None, mesh=None):
         shd = state_shardings
 
         def fwd_fn(params, sel_state, batch):
@@ -284,25 +292,45 @@ class SelectionMethod:
                         donate_argnums=(0, 2, 3) if donate else ())
 
         nb = partition.num_blocks
+        planner = swap_mod.SwapPlanner(
+            partition, self.sel_cfg, nb, enabled=opt_cfg.async_swap,
+            # sharded store/bank reads carry collectives: keep the boundary
+            # job on this thread so its enqueue order can't interleave with
+            # phase B's (see SwapPlanner.__init__)
+            inline=mesh is not None and mesh.devices.size > 1)
+        stats = planner.stats
 
         def step_fn(state, batch):
+            t0 = time.perf_counter()
             grads, mask, sel_state, loss, metrics, gnorm, block_norms = fwd(
                 state["params"], state["sel"], batch)
-            opt = state["opt"]
             # selection-change boundary: stream moments store<->banks. The
             # policy's static-shape [k] indices vector is the one host sync
             # the paper's design pays (k ids, not a [num_blocks] mask).
             idx = np.asarray(sel_state["indices"])
-            mask_host = np.zeros((nb,), bool)
-            mask_host[idx[idx < nb]] = True
+            t1 = time.perf_counter()
+            opt = state["opt"]
             store = offload.ensure_store_residency(opt["store"],
                                                    opt_cfg.offload,
                                                    shardings=store_sh)
-            banks, slot_map, store = masked_adamw.swap_banked(
-                partition, opt["banks"], store, opt["slot_map"], mask_host)
+            # joins any in-flight dispatch; a prediction hit leaves only the
+            # commit (a few async scatters) on the critical path, a miss
+            # falls back to the synchronous swap (counted in stats)
+            banks, slot_map, store = planner.resolve(
+                idx, opt["banks"], store, opt["slot_map"])
+            t2 = time.perf_counter()
             params, banks, counts, lr = apply(
                 state["params"], grads, banks, opt["counts"], mask,
                 state["step"])
+            # phase B is in flight: predict step t+1's selection and stage
+            # its boundary in the background (device reads inside the job
+            # block on apply's outputs there, not here)
+            planner.dispatch(sel_state, banks, store, slot_map)
+            t3 = time.perf_counter()
+            stats.steps += 1
+            stats.phase_a_us += (t1 - t0) * 1e6
+            stats.swap_us += (t2 - t1) * 1e6
+            stats.phase_b_us += (t3 - t2) * 1e6
             new_state = {"params": params,
                          "opt": {"banks": banks, "slot_map": slot_map,
                                  "counts": counts, "store": store},
@@ -311,8 +339,11 @@ class SelectionMethod:
                                            block_norms, state["step"])
 
         # expose the compiled phases (dry-run lowering, recompile tests)
+        # and the planner (trainer quiesce hooks, bench stats)
         step_fn.forward_select = fwd
         step_fn.apply = apply
+        step_fn.swap_planner = planner
+        step_fn.swap_stats = stats
         return step_fn
 
     # --------------------------------------------------------------- eval

@@ -175,6 +175,12 @@ class Trainer:
             self._train_loop(tcfg, fetch, step0, steps, last, pending, t0)
         finally:
             fetch.close()
+            # async banked streaming: join any in-flight boundary dispatch
+            # before the caller can read/checkpoint/donate the state it
+            # references (the job mutates the host store in place)
+            planner = getattr(self.step_fn, "swap_planner", None)
+            if planner is not None:
+                planner.quiesce()
             # commit consumption: read-ahead must not advance the stream
             # past what the loop actually trained on
             if (self._data_cursor is not None
@@ -218,6 +224,12 @@ class Trainer:
                 self.log.metrics.append({"step": step, **small})
             if (self.ckpt is not None and tcfg.checkpoint_every
                     and (step + 1) % tcfg.checkpoint_every == 0):
+                # an in-flight boundary dispatch holds references into the
+                # banks/store about to be snapshotted (and writes the host
+                # store in place) — barrier it out before saving
+                planner = getattr(self.step_fn, "swap_planner", None)
+                if planner is not None:
+                    planner.quiesce()
                 # the data cursor rides along in meta.json: restoring this
                 # checkpoint resumes the record stream exactly after the
                 # batch consumed at `step` (no skips, no repeats)

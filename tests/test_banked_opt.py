@@ -117,6 +117,44 @@ def test_banked_trainer_matches_dense_trainer():
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
 
 
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_async_swap_trajectory_bit_exact(policy):
+    """The overlapped boundary may never change the trajectory. For every
+    registered policy: banked + async streaming == banked synchronous ==
+    the dense trainer, bit for bit — a prediction hit commits exactly the
+    rows the synchronous path would have staged, and a miss falls back to
+    that path. Also pins the planner's accounting: async-on dispatches,
+    async-off never does."""
+    t_dense = Trainer(_tcfg("device", policy=policy), method=policy)
+    t_sync = Trainer(_tcfg("banked", policy=policy, async_swap=False),
+                     method=policy)
+    t_async = Trainer(_tcfg("banked", policy=policy, async_swap=True),
+                      method=policy)
+    ld, ls, la = t_dense.train(), t_sync.train(), t_async.train()
+    np.testing.assert_array_equal(ld.losses, la.losses)
+    np.testing.assert_array_equal(ls.losses, la.losses)
+    for a, b in zip(jax.tree.leaves(t_sync.state["params"]),
+                    jax.tree.leaves(t_async.state["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(t_dense.state["params"]),
+                    jax.tree.leaves(t_async.state["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    part = pmod.build_partition(TINY)
+    m_sync, v_sync = masked_adamw.materialize_moments(part,
+                                                      t_sync.state["opt"])
+    m_async, v_async = masked_adamw.materialize_moments(part,
+                                                        t_async.state["opt"])
+    for a, b in zip(jax.tree.leaves((m_sync, v_sync)),
+                    jax.tree.leaves((m_async, v_async))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    on, off = t_async.step_fn.swap_stats, t_sync.step_fn.swap_stats
+    assert on.dispatches > 0
+    assert off.dispatches == 0 and off.predicted_hits == 0
+    # the overlapped driver still compiles each phase exactly once
+    assert t_async.step_fn.forward_select._cache_size() == 1
+    assert t_async.step_fn.apply._cache_size() == 1
+
+
 def test_banked_pallas_path_matches_dense_pallas():
     """Fused Pallas kernel on bank rows == dense Pallas on full leaves."""
     part = pmod.build_partition(TINY)

@@ -163,12 +163,14 @@ TINY = ModelConfig(name="sharded-tiny", family="dense", num_layers=8,
                    d_ff=32, vocab_size=24, dtype="float32", remat="none",
                    tie_embeddings=False)
 
-def tcfg(residency, offload_p, policy="adagradselect", steps=8, **tkw):
+def tcfg(residency, offload_p, policy="adagradselect", steps=8,
+         async_swap=True, **tkw):
     return TrainConfig(model=TINY,
         select=SelectConfig(policy=policy, k_percent=40, steps_per_epoch=10,
                             epsilon_decay=0.05, lisa_interval=3),
         optimizer=OptimizerConfig(lr=1e-2, schedule="constant", warmup_steps=0,
-                                  moment_residency=residency, offload=offload_p),
+                                  moment_residency=residency, offload=offload_p,
+                                  async_swap=async_swap),
         seq_len=48, global_batch=8, steps=steps, seed=0, log_every=0, **tkw)
 
 mesh = make_data_mesh()
@@ -225,6 +227,43 @@ print("OK", len(combos))
 """, num_devices=8, timeout=560)
     assert "OK 5" in out
     assert "STORE_RATIO 0.125" in out
+
+
+def test_dp8_async_swap_parity(multidevice):
+    """banked + zero1 on dp=8: the overlapped boundary must be bit-identical
+    to the synchronous one under sharded stores — losses, params, AND
+    materialized moments — for two policies, with the planner actually
+    dispatching (and hitting) on the async side and never on the sync
+    side. Both banked phases still compile exactly once either way."""
+    out = multidevice(_DP8_PRELUDE + """
+from repro.core import masked_adamw
+from repro.core import partition as pmod
+
+part = pmod.build_partition(TINY)
+for pol in ("adagradselect",):
+    runs = {}
+    for flag in (False, True):
+        tr = Trainer(tcfg("banked", "zero1", async_swap=flag), mesh=mesh,
+                     method=pol)
+        log = tr.train()
+        m, v = masked_adamw.materialize_moments(part, tr.state["opt"])
+        runs[flag] = (log, tr, m, v)
+        assert tr.step_fn.forward_select._cache_size() == 1, (pol, flag)
+        assert tr.step_fn.apply._cache_size() == 1, (pol, flag)
+    (ls, ts, ms, vs), (la, ta, ma, va) = runs[False], runs[True]
+    np.testing.assert_array_equal(ls.losses, la.losses)
+    for a, b in zip(jax.tree.leaves(ts.state["params"]),
+                    jax.tree.leaves(ta.state["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves((ms, vs)), jax.tree.leaves((ma, va))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    on, off = ta.step_fn.swap_stats, ts.step_fn.swap_stats
+    assert on.dispatches > 0 and off.dispatches == 0, (pol, on, off)
+    print("ASYNC_PARITY", pol, "hit_rate=%.2f" % on.predicted_hit_rate)
+print("OK async")
+""", num_devices=8, timeout=560)
+    assert "OK async" in out
+    assert "ASYNC_PARITY" in out
 
 
 def test_dp8_sharded_checkpoint_roundtrip(multidevice):
