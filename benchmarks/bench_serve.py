@@ -13,6 +13,11 @@ Two workloads on the same smoke arch (CPU, random weights):
                 frees slots at EOS and backfills, so its goodput must be
                 strictly higher.
 
+A third section (paged KV) reruns the staggered workload with long mixed
+prompts (16/96 at max_len 128) on a page pool sized at 0.375x the dense
+cache: goodput must still beat legacy while the allocated KV bytes shrink
+below half of the dense layout.
+
   PYTHONPATH=src python benchmarks/bench_serve.py --arch llama3.2-1b
 """
 from __future__ import annotations
@@ -68,13 +73,18 @@ def _attractor_token(cfg, params, prompt_len, new_tokens):
 
 
 def bench_staggered(cfg, params, *, num_requests, prompt_lens, new_tokens,
-                    chunk, num_slots, stagger, repeats):
+                    chunk, num_slots, stagger, repeats, engine_kw=None,
+                    attractor_len=None):
     rng = np.random.default_rng(1)
     lens = [prompt_lens[i % len(prompt_lens)] for i in range(num_requests)]
     prompts = [_tokens(rng, 1, ln, cfg.vocab_size)[0] for ln in lens]
     max_prompt = max(lens)
     max_len = max_prompt + new_tokens
-    eos = _attractor_token(cfg, params, max_prompt, new_tokens)
+    # greedy attractors are prompt-length dependent: sample the EOS token at
+    # ``attractor_len`` (default: the longest prompt) so the caller controls
+    # which length class terminates early
+    eos = _attractor_token(cfg, params, attractor_len or max_prompt,
+                           new_tokens)
 
     def make_requests():
         return [Request(uid=i, tokens=prompts[i], max_new_tokens=new_tokens,
@@ -82,7 +92,7 @@ def bench_staggered(cfg, params, *, num_requests, prompt_lens, new_tokens,
 
     def run_engine():
         eng = ServeEngine(cfg, params, max_len=max_len, num_slots=num_slots,
-                          eos_id=eos, decode_chunk=chunk)
+                          eos_id=eos, decode_chunk=chunk, **(engine_kw or {}))
         res = eng.run(make_requests())
         return sum(len(v) for v in res.values())
 
@@ -124,6 +134,83 @@ def bench_staggered(cfg, params, *, num_requests, prompt_lens, new_tokens,
 LAST_TABLE: dict | None = None
 
 
+# long-prompt staggered workload for the paged-KV comparison: mostly-short
+# traffic (prompt 16, budget 4) with one long request (prompt 96, budget 32)
+# per wave of eight, arriving in waves of four, at max_len 128. Decode-length
+# mixing is expressed through per-request max_new_tokens — deterministic,
+# unlike greedy-attractor EOS, whose token is prompt-length- and padding-
+# dependent. Legacy static batching pads every row to the long prompt and
+# decodes the batch-max budget for all of them; the engine retires each
+# short at its 4-token budget and backfills from the queue. The page pool
+# is 31/64 of the dense cache (8 slots x 128 positions = 64 pages of 16):
+# three longs plus a working set of shorts fit concurrently.
+PAGED_WORKLOAD = dict(num_requests=24, prompt_lens=[16] * 7 + [96],
+                      new_tokens=[4] * 7 + [32], chunk=8, num_slots=8,
+                      stagger=0.25)
+PAGED_KW = dict(kv_layout="paged", page_size=16, num_pages=31)
+
+
+def bench_paged_goodput(cfg, params, *, num_requests, prompt_lens,
+                        new_tokens, chunk, num_slots, stagger, repeats,
+                        engine_kw):
+    """Goodput (requested tokens / wall s) of the paged engine vs legacy
+    static batching on mixed prompt AND decode lengths. Legacy pads every
+    prompt to the longest and decodes its batch's max budget for every row;
+    the engine retires short-budget rows at their budget and backfills.
+    Both produce exactly sum(budgets) useful tokens."""
+    rng = np.random.default_rng(1)
+    lens = [prompt_lens[i % len(prompt_lens)] for i in range(num_requests)]
+    budgets = [new_tokens[i % len(new_tokens)] for i in range(num_requests)]
+    prompts = [_tokens(rng, 1, ln, cfg.vocab_size)[0] for ln in lens]
+    max_prompt, max_budget = max(lens), max(budgets)
+    max_len = max_prompt + max_budget
+    useful = sum(budgets)
+
+    def run_engine():
+        eng = ServeEngine(cfg, params, max_len=max_len, num_slots=num_slots,
+                          decode_chunk=chunk, **engine_kw)
+        res = eng.run([Request(uid=i, tokens=prompts[i],
+                               max_new_tokens=budgets[i],
+                               arrival=int(i * stagger))
+                       for i in range(num_requests)])
+        assert sum(len(v) for v in res.values()) == useful
+        return eng
+
+    run_engine()  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        eng = run_engine()
+    t_eng = (time.perf_counter() - t0) / repeats
+
+    padded = np.stack([np.pad(p, (0, max_prompt - len(p))) for p in prompts])
+
+    def run_legacy():
+        for start in range(0, num_requests, num_slots):
+            generate_legacy(params, cfg, {"tokens": padded[start:start
+                                                           + num_slots]},
+                            max_new_tokens=max_budget, max_len=max_len)
+
+    run_legacy()  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        run_legacy()
+    t_leg = (time.perf_counter() - t0) / repeats
+
+    return useful / t_leg, useful / t_eng, eng
+
+
+def _paged_supported(cfg) -> bool:
+    return (cfg.family in ("dense", "moe") and not cfg.use_mla
+            and cfg.moe_impl != "ep")
+
+
+def _cache_bytes(cfg, params, *, max_len, num_slots, engine_kw=None):
+    """Allocated KV bytes for an (un-run) engine at the given capacity."""
+    eng = ServeEngine(cfg, params, max_len=max_len, num_slots=num_slots,
+                      **(engine_kw or {}))
+    return eng.kv_cache_bytes()
+
+
 def run(arch: str = "llama3.2-1b", **_):
     """CSV rows for benchmarks/run.py: µs per generated token + tok/s."""
     global LAST_TABLE
@@ -142,12 +229,35 @@ def run(arch: str = "llama3.2-1b", **_):
         "staggered_legacy_tok_s": gl, "staggered_engine_tok_s": ge,
         "staggered_engine_vs_legacy": ge / max(1e-9, gl),
     }
-    return [
+    rows = [
         ("serve/uniform_legacy", 1e6 / leg, f"{leg:.1f} tok/s"),
         ("serve/uniform_engine", 1e6 / eng, f"{eng:.1f} tok/s"),
         ("serve/staggered_legacy", 1e6 / gl, f"{gl:.1f} useful tok/s"),
         ("serve/staggered_engine", 1e6 / ge, f"{ge:.1f} useful tok/s"),
     ]
+    if _paged_supported(cfg):
+        gl2, gp2, _ = bench_paged_goodput(cfg, params, repeats=2,
+                                          engine_kw=PAGED_KW,
+                                          **PAGED_WORKLOAD)
+        cap = dict(max_len=max(PAGED_WORKLOAD["prompt_lens"])
+                   + max(PAGED_WORKLOAD["new_tokens"]),
+                   num_slots=PAGED_WORKLOAD["num_slots"])
+        dense_b = _cache_bytes(cfg, params, **cap)
+        paged_b = _cache_bytes(cfg, params, engine_kw=PAGED_KW, **cap)
+        LAST_TABLE.update({
+            "staggered_paged_tok_s": gp2,
+            "staggered_paged_vs_legacy": gp2 / max(1e-9, gl2),
+            "serve_cache_bytes_dense": dense_b,
+            "serve_cache_bytes_paged": paged_b,
+            "paged_vs_dense_cache_bytes": paged_b / max(1, dense_b),
+        })
+        rows += [
+            ("serve/staggered_paged", 1e6 / gp2, f"{gp2:.1f} useful tok/s"),
+            ("serve/cache_bytes_dense", dense_b, f"{dense_b/1e6:.2f} MB"),
+            ("serve/cache_bytes_paged", paged_b,
+             f"{paged_b/1e6:.2f} MB ({paged_b/dense_b:.2f}x dense)"),
+        ]
+    return rows
 
 
 def main():
@@ -188,7 +298,30 @@ def main():
     print(f"  engine:              {ge:9.1f} useful tok/s "
           f"({ue} useful tokens)  ({ge / gl:.2f}x)  "
           f"{'OK (goodput > legacy)' if ge > gl else 'REGRESSION'}")
-    return 0 if (eng >= leg and ge > gl) else 1
+
+    paged_ok = True
+    if _paged_supported(cfg):
+        gl2, gp2, _ = bench_paged_goodput(
+            cfg, params, repeats=args.repeats, engine_kw=PAGED_KW,
+            **PAGED_WORKLOAD)
+        cap = dict(max_len=max(PAGED_WORKLOAD["prompt_lens"])
+                   + max(PAGED_WORKLOAD["new_tokens"]),
+                   num_slots=PAGED_WORKLOAD["num_slots"])
+        dense_b = _cache_bytes(cfg, params, **cap)
+        paged_b = _cache_bytes(cfg, params, engine_kw=PAGED_KW, **cap)
+        paged_ok = gp2 > gl2 and paged_b < dense_b
+        print(f"[{args.arch}] paged KV, mixed prompts "
+              f"{PAGED_WORKLOAD['prompt_lens']} budgets "
+              f"{PAGED_WORKLOAD['new_tokens']} "
+              f"(pool {PAGED_KW['num_pages']} pages of "
+              f"{PAGED_KW['page_size']}):")
+        print(f"  legacy static batch: {gl2:9.1f} useful tok/s")
+        print(f"  paged engine:        {gp2:9.1f} useful tok/s "
+              f"({gp2 / gl2:.2f}x)")
+        print(f"  kv cache: dense {dense_b/1e6:.2f} MB, paged "
+              f"{paged_b/1e6:.2f} MB ({paged_b/dense_b:.2f}x)  "
+              f"{'OK' if paged_ok else 'REGRESSION'}")
+    return 0 if (eng >= leg and ge > gl and paged_ok) else 1
 
 
 if __name__ == "__main__":

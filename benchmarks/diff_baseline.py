@@ -15,6 +15,16 @@ Key metrics (direction-aware, default tolerance 20%, per-metric overrides):
     serve engine's tok/s (goodput) as a multiple of the legacy static-batch
     loop (serve table; higher is better). Ratios of two timings on the same
     runner, so CI noise largely cancels.
+  * ``staggered_paged_vs_legacy`` — paged-KV engine goodput on the mixed
+    prompt/budget workload as a multiple of legacy static batching (higher
+    is better). The baseline is capped at 2.0 before comparing: the guard
+    is "paged serving stays >= ~2x legacy", not "reproduce the margin an
+    unloaded runner happened to measure".
+  * ``paged_vs_dense_cache_bytes`` — allocated KV bytes of the paged layout
+    as a fraction of the dense layout at the same capacity (lower is
+    better). Deterministic (pure allocation arithmetic), so the tolerance
+    is a tight 3%: with the committed pool at 31/64 pages (~0.485x) this
+    keeps the ratio under the 0.5x contract.
   * ``data_packed_kept`` — correctly-supervised completion-token fraction
     under greedy segment packing (data table; higher is better).
     Deterministic: any drop means the packer regressed.
@@ -64,6 +74,12 @@ KEY_METRICS = (
     ("staggered_engine_vs_legacy",
      lambda p: (p.get("serve_table") or {}).get("staggered_engine_vs_legacy"),
      +1, None, None),
+    ("staggered_paged_vs_legacy",
+     lambda p: (p.get("serve_table") or {}).get("staggered_paged_vs_legacy"),
+     +1, 2.0, None),
+    ("paged_vs_dense_cache_bytes",
+     lambda p: (p.get("serve_table") or {}).get("paged_vs_dense_cache_bytes"),
+     -1, None, 0.03),
     ("data_packed_kept",
      lambda p: (p.get("data_table") or {}).get("packed_kept"),
      +1, None, None),

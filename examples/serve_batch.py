@@ -1,9 +1,10 @@
 """Batched serving demo: continuous-batching engine (prefill into slots +
-chunked decode with a persistent KV cache), report tokens/sec; runs any
-smoke arch (--arch).
+chunked decode with a persistent KV cache), report tokens/sec and page-pool
+utilization; runs any smoke arch (--arch).
 
   PYTHONPATH=src python examples/serve_batch.py --arch llama3.2-1b
   PYTHONPATH=src python examples/serve_batch.py --arch mamba2-2.7b
+  PYTHONPATH=src python examples/serve_batch.py --kv-layout paged --page-size 8
 """
 import argparse
 import time
@@ -13,7 +14,7 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models import registry
-from repro.serve.engine import generate
+from repro.serve.engine import ServeEngine
 
 
 def main():
@@ -23,6 +24,9 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=48)
     ap.add_argument("--decode-chunk", type=int, default=8)
+    ap.add_argument("--kv-layout", choices=["dense", "paged"],
+                    default="dense")
+    ap.add_argument("--page-size", type=int, default=16)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch).replace(ssm_chunk=32)
@@ -41,19 +45,27 @@ def main():
 
     prefix = cfg.num_frontend_tokens if cfg.family == "vlm" else 0
     max_len = args.prompt_len + prefix + args.new_tokens
-    kw = dict(max_new_tokens=args.new_tokens, max_len=max_len,
-              decode_chunk=args.decode_chunk)
+    engine_kw = dict(max_len=max_len, num_slots=args.batch,
+                     decode_chunk=args.decode_chunk,
+                     kv_layout=args.kv_layout, page_size=args.page_size)
 
     # warmup (compile) with the SAME max_len/shapes so the timed call is
     # pure steady state
-    generate(params, cfg, batch, **kw)
+    ServeEngine(cfg, params, **engine_kw).generate(
+        batch, max_new_tokens=args.new_tokens)
+    engine = ServeEngine(cfg, params, **engine_kw)
     t0 = time.perf_counter()
-    out = generate(params, cfg, batch, **kw)
+    out = engine.generate(batch, max_new_tokens=args.new_tokens)
     dt = time.perf_counter() - t0
     print(f"[{args.arch}] batch={args.batch} prompt={args.prompt_len} "
-          f"new={args.new_tokens}")
+          f"new={args.new_tokens} kv_layout={args.kv_layout}")
+    pool = engine.page_pool_stats()
+    util = (f"  pool {pool['peak_live_pages']}/{pool['num_pages']} pages "
+            f"({pool['peak_live_pages'] / pool['num_pages']:.0%} peak)"
+            if pool is not None else "  pool n/a (dense layout)")
     print(f"  {args.batch * args.new_tokens / dt:8.1f} tok/s "
-          f"({dt*1e3/args.new_tokens:.1f} ms/step)")
+          f"({dt*1e3/args.new_tokens:.1f} ms/step)"
+          f"  | cache {engine.kv_cache_bytes() / 1e6:.2f} MB |{util}")
     print(f"  sample: {out[0][:16].tolist()}")
 
 

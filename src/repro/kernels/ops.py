@@ -112,6 +112,20 @@ def decode_attention(q, k, v, valid_len):
     return o.reshape(b, 1, h, d)
 
 
+def paged_decode_attention(q, k_pool, v_pool, page_tables, valid_len, hmap):
+    """q: [B, 1, H, D]; k_pool/v_pool: [num_pages, page_size, KVH, D] shared
+    pools; page_tables: [B, max_pages] i32; valid_len: [B] i32; hmap: [H]
+    q-head -> kv-head map -> [B, 1, H, D]. Unlike the dense wrapper no
+    head-expanded [B, S, H, D] view is ever built — the kernel reads pool
+    pages through the table and kv heads through hmap."""
+    b, _, h, d = q.shape
+    o = _dec.paged_decode_attention(q.reshape(b, h, d), k_pool, v_pool,
+                                    page_tables, valid_len,
+                                    jnp.asarray(hmap, jnp.int32),
+                                    interpret=_interpret())
+    return o.reshape(b, 1, h, d)
+
+
 def rmsnorm(x, scale, eps=1e-5):
     """x: [..., D] -> fused RMSNorm over the trailing dim."""
     shape = x.shape

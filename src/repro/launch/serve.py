@@ -1,11 +1,15 @@
 """Serving launcher: continuous-batching engine over a (smoke or full) model.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
-      --batch 4 --prompt-len 16 --new-tokens 32
+      --batch 4 --prompt-len 16 --new-tokens 32 --kv-layout paged
 
 Reports compile time (warmup call) and steady-state tok/s separately — the
 pre-warmup number was dominated by XLA compile and meaningless as a
-throughput figure.
+throughput figure. The warmup report also surfaces the compiled-fn cache
+counters (hits/misses/evictions/size): a steady-state call that adds misses
+means a closure was rebuilt (and recompiled) when it should have been
+cached. With ``--kv-layout paged`` the page-pool stats (live/peak pages,
+utilization) are printed too.
 """
 from __future__ import annotations
 
@@ -25,12 +29,27 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--decode-chunk", type=int, default=8)
+    ap.add_argument("--kv-layout", choices=["dense", "paged"],
+                    default="dense")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="page-pool size (0 = full dense capacity)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill width (0 = single-shot)")
+    ap.add_argument("--prefill-rows", type=int, default=1,
+                    help="rows per bucketed prefill batch")
+    ap.add_argument("--fn-cache-limit", type=int, default=0,
+                    help="bound the compiled-fn LRU (0 = keep default)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     from repro.configs import get_config, get_smoke_config
     from repro.models import registry
-    from repro.serve.engine import generate
+    from repro.serve.engine import (ServeEngine, fn_cache_info,
+                                    set_fn_cache_limit)
+
+    if args.fn_cache_limit:
+        set_fn_cache_limit(args.fn_cache_limit)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = registry.get(cfg)
@@ -48,22 +67,44 @@ def main():
 
     prefix = cfg.num_frontend_tokens if cfg.family == "vlm" else 0
     max_len = args.prompt_len + prefix + args.new_tokens
-    kw = dict(max_new_tokens=args.new_tokens, max_len=max_len,
-              temperature=args.temperature, rng=rng,
-              decode_chunk=args.decode_chunk)
+    engine_kw = dict(max_len=max_len, num_slots=args.batch,
+                     temperature=args.temperature, rng=rng,
+                     decode_chunk=args.decode_chunk,
+                     kv_layout=args.kv_layout, page_size=args.page_size,
+                     num_pages=args.num_pages or None,
+                     prefill_chunk=args.prefill_chunk,
+                     prefill_rows=args.prefill_rows)
+
+    def one_pass():
+        engine = ServeEngine(cfg, params, **engine_kw)
+        out = engine.generate(batch, max_new_tokens=args.new_tokens)
+        return out, engine
 
     # warmup: same shapes/max_len as the timed call, so every compile
     # (prefill, decode chunk, insert) lands here
     t0 = time.perf_counter()
-    generate(params, cfg, batch, **kw)
+    one_pass()
     t_compile = time.perf_counter() - t0
+    warm = fn_cache_info()
 
     t0 = time.perf_counter()
-    out = generate(params, cfg, batch, **kw)
+    out, engine = one_pass()
     dt = time.perf_counter() - t0
+    steady = fn_cache_info()
     tps = args.batch * args.new_tokens / dt
     print(f"compile+first-call: {t_compile:.2f}s")
+    print(f"  fn-cache after warmup: {warm['misses']} misses "
+          f"{warm['hits']} hits, {warm['size']}/{warm['limit']} entries, "
+          f"{warm['evictions']} evictions")
     print(f"steady state: generated {out.shape} in {dt:.2f}s ({tps:.1f} tok/s)")
+    print(f"  fn-cache after steady: {steady['misses']} misses "
+          f"(+{steady['misses'] - warm['misses']} new) {steady['hits']} hits")
+    pool = engine.page_pool_stats()
+    if pool is not None:
+        print(f"  page pool: peak {pool['peak_live_pages']}/"
+              f"{pool['num_pages']} pages "
+              f"({pool['peak_live_pages'] / pool['num_pages']:.0%} peak "
+              f"utilization), cache {engine.kv_cache_bytes() / 1e6:.2f} MB")
     print("first row:", out[0][:24])
     return 0
 

@@ -75,6 +75,31 @@ def attn_block_decode(params, cfg: ModelConfig, x, cache0, cache1, pos):
     return x, cache0, cache1
 
 
+def attn_block_prefill_chunk(params, cfg: ModelConfig, x, k_cache, v_cache,
+                             start):
+    """One chunk of an incremental prefill (GQA only — chunked prefill
+    rejects MLA upstream)."""
+    h = norms.apply(params["ln1"], x, cfg.norm_eps)
+    h, k_cache, v_cache = attention.apply_prefill_chunk(
+        params["attn"], cfg, h, k_cache, v_cache, start)
+    x = x + h
+    h = norms.apply(params["ln2"], x, cfg.norm_eps)
+    x = x + mlp.apply(params["mlp"], cfg, h)
+    return x, k_cache, v_cache
+
+
+def attn_block_decode_paged(params, cfg: ModelConfig, x, k_pool, v_pool,
+                            pages, pos):
+    """Paged-KV decode (GQA only — the paged layout rejects MLA upstream)."""
+    h = norms.apply(params["ln1"], x, cfg.norm_eps)
+    h, k_pool, v_pool = attention.apply_decode_paged(
+        params["attn"], cfg, h, k_pool, v_pool, pages, pos)
+    x = x + h
+    h = norms.apply(params["ln2"], x, cfg.norm_eps)
+    x = x + mlp.apply(params["mlp"], cfg, h)
+    return x, k_pool, v_pool
+
+
 # ------------------------------------------------------------- MoE block
 
 
@@ -137,6 +162,30 @@ def moe_block_decode(params, cfg: ModelConfig, x, cache0, cache1, pos, *,
     else:
         y, _ = moe.apply_dense(params["moe"], cfg, h)
     return x + y, cache0, cache1
+
+
+def moe_block_prefill_chunk(params, cfg: ModelConfig, x, k_cache, v_cache,
+                            start, *, mesh=None, batch_axes=("data",)):
+    h = norms.apply(params["ln1"], x, cfg.norm_eps)
+    h, k_cache, v_cache = attention.apply_prefill_chunk(
+        params["attn"], cfg, h, k_cache, v_cache, start)
+    x = x + h
+    h = norms.apply(params["ln2"], x, cfg.norm_eps)
+    y, _ = moe.apply(params["moe"], cfg, h, mesh=mesh, batch_axes=batch_axes)
+    return x + y, k_cache, v_cache
+
+
+def moe_block_decode_paged(params, cfg: ModelConfig, x, k_pool, v_pool,
+                           pages, pos):
+    """Paged-KV MoE decode (dense expert dispatch only — EP-MoE decode is
+    mesh-coupled and stays on the dense cache path)."""
+    h = norms.apply(params["ln1"], x, cfg.norm_eps)
+    h, k_pool, v_pool = attention.apply_decode_paged(
+        params["attn"], cfg, h, k_pool, v_pool, pages, pos)
+    x = x + h
+    h = norms.apply(params["ln2"], x, cfg.norm_eps)
+    y, _ = moe.apply_dense(params["moe"], cfg, h)
+    return x + y, k_pool, v_pool
 
 
 # ------------------------------------------------------------- SSM block

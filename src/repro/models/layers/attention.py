@@ -112,6 +112,34 @@ def apply_prefill(params, cfg: ModelConfig, x, *, prefix_len: int = 0,
     return out, (k, v)
 
 
+def apply_prefill_chunk(params, cfg: ModelConfig, x, k_cache, v_cache, start):
+    """One chunk of an incremental prefill. x: [B, C, D] chunk tokens at
+    positions [start, start+C); caches [B, Smax, KVH, Dh] carry every
+    earlier chunk's K/V. Writes this chunk's K/V at ``start`` (a traced
+    scalar — one compile per chunk shape, not per offset) and attends the
+    chunk queries over the whole cache with the causal mask anchored at
+    ``q_offset=start``; cache positions past start+C are zero AND causally
+    masked, so the result equals the single-shot prefill chunk-for-chunk.
+    Returns (out [B,C,D], new_k, new_v)."""
+    b, c, _ = x.shape
+    start = jnp.asarray(start, jnp.int32)
+    positions = start + jnp.arange(c)
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k.astype(k_cache.dtype), start, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v.astype(v_cache.dtype), start, axis=1)
+    out = core.full_attention(q, k_cache, v_cache, hmap=_hmap(cfg),
+                              causal=True, q_offset=start,
+                              softcap=cfg.attn_logit_softcap)
+    out = out.astype(x.dtype)
+    hm = _head_mask(cfg, out.dtype)
+    if hm is not None:
+        out = out * hm
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return out, k_cache, v_cache
+
+
 def apply_decode(params, cfg: ModelConfig, x, k_cache, v_cache, pos):
     """One-token decode. x: [B, 1, D]; caches [B, Smax, KVH, Dh]; pos: scalar
     or per-row [B] vector index of the new token (per-slot positions for
@@ -133,3 +161,58 @@ def apply_decode(params, cfg: ModelConfig, x, k_cache, v_cache, pos):
         out = out * hm
     out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
     return out, k_cache, v_cache
+
+
+def _use_paged_kernel(cfg: ModelConfig) -> bool:
+    if cfg.use_pallas == "always":
+        return True
+    if cfg.use_pallas == "never":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def apply_decode_paged(params, cfg: ModelConfig, x, k_pool, v_pool, pages,
+                       pos):
+    """One-token decode against a shared page pool. x: [B, 1, D]; pools
+    [num_pages, page_size, KVH, Dh] (one layer's slice); pages: [B,
+    max_pages] i32 per-slot page tables (entries >= num_pages unallocated);
+    pos: per-row [B] write position. The new K/V scatters into pool page
+    ``pages[b, pos // page_size]``; writes through sentinel entries (freed
+    or overrun slots) land out of bounds and drop, so a finished slot that
+    keeps riding the decode chunk can never touch a reassigned page.
+    Returns (out [B,1,D], new_k_pool, new_v_pool)."""
+    b = x.shape[0]
+    num_pages, ps = k_pool.shape[0], k_pool.shape[1]
+    maxp = pages.shape[1]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    positions = pos[:, None]
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    pidx = pos // ps
+    page = jnp.where(pidx < maxp,
+                     pages[jnp.arange(b), jnp.minimum(pidx, maxp - 1)],
+                     num_pages)
+    off = pos % ps
+    k_pool = k_pool.at[page, off].set(k[:, 0].astype(k_pool.dtype))
+    v_pool = v_pool.at[page, off].set(v[:, 0].astype(v_pool.dtype))
+    hmap = _hmap(cfg)
+    if _use_paged_kernel(cfg):
+        from repro.kernels import ops
+        out = ops.paged_decode_attention(q, k_pool, v_pool, pages, pos + 1,
+                                         hmap)
+    else:
+        # reference path: gather the row-major dense view through the table
+        # (clamped — garbage rows sit past valid_len and mask to exact
+        # zeros) and reuse the dense decode attention, so paged and dense
+        # engines are bit-identical on this path
+        tbl = jnp.minimum(pages, num_pages - 1)
+        kvh, dh = k_pool.shape[2], k_pool.shape[3]
+        kd = k_pool[tbl].reshape(b, maxp * ps, kvh, dh)
+        vd = v_pool[tbl].reshape(b, maxp * ps, kvh, dh)
+        out = core.decode_attention(q, kd, vd, pos + 1, hmap=hmap,
+                                    softcap=cfg.attn_logit_softcap)
+    out = out.astype(x.dtype)
+    hm = _head_mask(cfg, out.dtype)
+    if hm is not None:
+        out = out * hm
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return out, k_pool, v_pool

@@ -351,7 +351,20 @@ def init_cache(cfg: ModelConfig, batch_size: int, max_len: int) -> dict:
 
 
 def prefill(params: dict, cfg: ModelConfig, batch: dict, max_len: int, *,
-            mesh=None, batch_axes=("data",)):
+            mesh=None, batch_axes=("data",), lengths=None):
+    """``lengths`` (optional [B] i32): true prompt lengths when ``tokens`` is
+    right-padded to a shared bucket (bucketed prefill). Per-row logits are
+    gathered at ``lengths - 1`` and ``cache["pos"] = lengths``; K/V
+    projections are pointwise in sequence and attention is causal, so rows
+    are exact regardless of pad tokens to their right. Only length-indexed
+    KV families support this (dense/moe, incl. MLA) — SSM state scans would
+    absorb the pad tokens, so ssm/hybrid/vlm reject ``lengths``."""
+    if lengths is not None and cfg.family not in ("dense", "moe"):
+        raise ValueError(
+            f"bucket-padded prefill (lengths=) is not supported for family="
+            f"{cfg.family!r}: its recurrent/prefix state would absorb the "
+            f"pad tokens. Serve this family with exact-length prefill "
+            f"(ServeEngine falls back automatically).")
     tokens = batch["tokens"]
     b, s = tokens.shape
     x = _embed_tokens(params, cfg, tokens)
@@ -399,9 +412,142 @@ def prefill(params: dict, cfg: ModelConfig, batch: dict, max_len: int, *,
         x, cache = _hybrid_prefill(params, cfg, x, cache, max_len)
 
     x = norms.apply(params["final_norm"], x, cfg.norm_eps)
-    logits = _logits(params, cfg, x[:, -1:, :])[:, 0]
-    cache["pos"] = jnp.full((b,), seq, jnp.int32)
+    if lengths is None:
+        logits = _logits(params, cfg, x[:, -1:, :])[:, 0]
+        cache["pos"] = jnp.full((b,), seq, jnp.int32)
+    else:
+        lv = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (b,))
+        xl = x[jnp.arange(b), jnp.clip(lv - 1, 0, seq - 1)][:, None]
+        logits = _logits(params, cfg, xl)[:, 0]
+        cache["pos"] = lv
     return logits, cache
+
+
+def prefill_chunk(params: dict, cfg: ModelConfig, tokens, cache: dict, start,
+                  lengths, last_logits, *, mesh=None, batch_axes=("data",)):
+    """One chunk of an incremental prefill over a scratch dense cache.
+
+    ``tokens``: [B, C] chunk at positions [start, start+C) (``start`` is a
+    traced i32 scalar — one compile per chunk SHAPE, not per offset);
+    ``cache``: {"k", "v"} scratch [L, B, S_bucket, KVH, Dh] carrying earlier
+    chunks' K/V; ``lengths``: [B] true prompt lengths; ``last_logits``:
+    [B, V] carried last-position logits, updated for rows whose final prompt
+    token falls inside this chunk. Returns (last_logits', cache'). Chunked
+    prefill needs per-chunk KV append + offset attention, which the MLA and
+    recurrent families don't implement — dense/moe GQA only."""
+    if cfg.family not in ("dense", "moe") or cfg.use_mla:
+        raise ValueError(
+            f"chunked prefill is not supported for family={cfg.family!r}"
+            f"{' with MLA' if cfg.use_mla else ''}: it needs per-chunk KV "
+            f"append with offset attention. Use single-shot prefill "
+            f"(prefill_chunk=0) for this architecture.")
+    b, c = tokens.shape
+    start = jnp.asarray(start, jnp.int32)
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (b,))
+    x = _embed_tokens(params, cfg, tokens)
+
+    if cfg.family == "dense":
+        def body(x, xs):
+            p_l, k_l, v_l = xs
+            x, k_l, v_l = blocks.attn_block_prefill_chunk(p_l, cfg, x, k_l,
+                                                          v_l, start)
+            return x, (k_l, v_l)
+        x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"],
+                                             cache["v"]))
+        cache = {**cache, "k": ks, "v": vs}
+    else:
+        kss, vss = [], []
+        off = 0
+        if cfg.first_k_dense:
+            def body_d(x, xs):
+                p_l, k_l, v_l = xs
+                x, k_l, v_l = blocks.attn_block_prefill_chunk(p_l, cfg, x,
+                                                              k_l, v_l, start)
+                return x, (k_l, v_l)
+            nd = cfg.first_k_dense
+            x, (k_d, v_d) = jax.lax.scan(
+                body_d, x, (params["dense_layers"], cache["k"][:nd],
+                            cache["v"][:nd]))
+            kss.append(k_d); vss.append(v_d); off = nd
+
+        def body_m(x, xs):
+            p_l, k_l, v_l = xs
+            x, k_l, v_l = blocks.moe_block_prefill_chunk(
+                p_l, cfg, x, k_l, v_l, start, mesh=mesh, batch_axes=batch_axes)
+            return x, (k_l, v_l)
+        x, (k_m, v_m) = jax.lax.scan(
+            body_m, x, (params["moe_layers"], cache["k"][off:],
+                        cache["v"][off:]))
+        kss.append(k_m); vss.append(v_m)
+        cache = {**cache, "k": jnp.concatenate(kss, axis=0),
+                 "v": jnp.concatenate(vss, axis=0)}
+
+    x = norms.apply(params["final_norm"], x, cfg.norm_eps)
+    # rows whose last prompt token lives in this chunk pick up their logits
+    idx = jnp.clip(lengths - 1 - start, 0, c - 1)
+    sel = _logits(params, cfg, x[jnp.arange(b), idx][:, None])[:, 0]
+    hit = (lengths - 1 >= start) & (lengths - 1 < start + c)
+    last_logits = jnp.where(hit[:, None], sel.astype(last_logits.dtype),
+                            last_logits)
+    return last_logits, cache
+
+
+def init_paged_cache(cfg: ModelConfig, batch_size: int, max_len: int,
+                     page_size: int, num_pages: int) -> dict:
+    """Paged serve cache: K/V live in shared pools [L, num_pages, page_size,
+    KVH, Dh] and each slot maps virtual positions through ``pages``
+    [B, max_pages] (i32; the ``num_pages`` sentinel marks unallocated
+    entries — see serve/pages.py). ``pos`` semantics are identical to the
+    dense cache. SSM has no length-indexed KV, so paging is a no-op and the
+    regular cache is returned; families whose decode state the paged layout
+    cannot express raise with the supported alternatives."""
+    if cfg.family == "ssm":
+        return init_cache(cfg, batch_size, max_len)
+    if cfg.family not in ("dense", "moe") or cfg.use_mla:
+        raise ValueError(
+            f"paged KV cache is not supported for family={cfg.family!r}"
+            f"{' with MLA' if cfg.use_mla else ''}: only plain GQA/MHA "
+            f"dense and moe stacks (and ssm, where it is a no-op) have a "
+            f"paged decode path. Use kv_layout='dense' for this "
+            f"architecture.")
+    dt = jnp.dtype(cfg.dtype)
+    maxp = -(-max_len // page_size)
+    n = _attn_layer_count(cfg)
+    kvh, dh = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "pos": jnp.zeros((batch_size,), jnp.int32),
+        "pages": jnp.full((batch_size, maxp), num_pages, jnp.int32),
+        "k": jnp.zeros((n, num_pages, page_size, kvh, dh), dt),
+        "v": jnp.zeros((n, num_pages, page_size, kvh, dh), dt),
+    }
+
+
+def insert_slots_paged(cache: dict, src: dict, slots, lengths) -> dict:
+    """Scatter a dense prefill cache (``src``: k/v [L, n, S, KVH, Dh]) into
+    the page pools through the device-mirrored table ``cache["pages"]``.
+    ``slots``: [n] i32 slot per row (entries == num_slots are admission
+    padding — their writes drop); ``lengths``: [n] true prompt lengths —
+    positions >= length route to the OOB sentinel and drop, so bucket-pad
+    garbage never reaches the pool."""
+    k_pool, v_pool = cache["k"], cache["v"]
+    num_pages, ps = k_pool.shape[1], k_pool.shape[2]
+    num_slots, maxp = cache["pages"].shape
+    slots = jnp.asarray(slots, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    s_max = src["k"].shape[2]
+    valid_slot = slots < num_slots
+    tbl = jnp.where(valid_slot[:, None],
+                    cache["pages"][jnp.minimum(slots, num_slots - 1)],
+                    num_pages)                                   # [n, maxp]
+    t = jnp.arange(s_max)
+    page = tbl[:, jnp.minimum(t // ps, maxp - 1)]                # [n, s_max]
+    ok = (t[None, :] < lengths[:, None]) & (t[None, :] // ps < maxp)
+    page = jnp.where(ok, page, num_pages)
+    off = jnp.broadcast_to(t % ps, page.shape)
+    k_pool = k_pool.at[:, page, off].set(src["k"].astype(k_pool.dtype))
+    v_pool = v_pool.at[:, page, off].set(src["v"].astype(v_pool.dtype))
+    pos = cache["pos"].at[slots].set(lengths)
+    return {**cache, "k": k_pool, "v": v_pool, "pos": pos}
 
 
 def insert_slots(cache: dict, src: dict, slots) -> dict:
@@ -471,7 +617,46 @@ def decode_step(params: dict, cfg: ModelConfig, tokens, cache: dict, *,
                            (tokens.shape[0],))
     x = _embed_tokens(params, cfg, tokens)
 
-    if cfg.family in ("dense", "vlm"):
+    paged = "pages" in cache
+    if cfg.family in ("dense", "vlm") and paged:
+        pages = cache["pages"]
+
+        def body_p(x, xs):
+            p_l, kp, vp = xs
+            x, kp, vp = blocks.attn_block_decode_paged(p_l, cfg, x, kp, vp,
+                                                       pages, pos)
+            return x, (kp, vp)
+        x, (kp, vp) = jax.lax.scan(body_p, x, (params["layers"], cache["k"],
+                                               cache["v"]))
+        cache = {**cache, "k": kp, "v": vp}
+    elif cfg.family == "moe" and paged:
+        pages = cache["pages"]
+        c0s, c1s = [], []
+        off = 0
+        if cfg.first_k_dense:
+            def body_dp(x, xs):
+                p_l, kp, vp = xs
+                x, kp, vp = blocks.attn_block_decode_paged(p_l, cfg, x, kp,
+                                                           vp, pages, pos)
+                return x, (kp, vp)
+            nd = cfg.first_k_dense
+            x, (kp, vp) = jax.lax.scan(
+                body_dp, x, (params["dense_layers"], cache["k"][:nd],
+                             cache["v"][:nd]))
+            c0s.append(kp); c1s.append(vp); off = nd
+
+        def body_mp(x, xs):
+            p_l, kp, vp = xs
+            x, kp, vp = blocks.moe_block_decode_paged(p_l, cfg, x, kp, vp,
+                                                      pages, pos)
+            return x, (kp, vp)
+        x, (kp, vp) = jax.lax.scan(
+            body_mp, x, (params["moe_layers"], cache["k"][off:],
+                         cache["v"][off:]))
+        c0s.append(kp); c1s.append(vp)
+        cache = {**cache, "k": jnp.concatenate(c0s, axis=0),
+                 "v": jnp.concatenate(c1s, axis=0)}
+    elif cfg.family in ("dense", "vlm"):
         def body(x, xs):
             p_l, c0, c1 = xs
             x, c0, c1 = blocks.attn_block_decode(p_l, cfg, x, c0, c1, pos)

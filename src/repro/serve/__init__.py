@@ -1,7 +1,9 @@
-"""Serving subsystem: continuous-batching engine + request scheduler."""
-from repro.serve.engine import (ServeEngine, fn_cache_info, generate,
-                                generate_legacy)
+"""Serving subsystem: continuous-batching engine + paged KV pool + scheduler."""
+from repro.serve.engine import (ServeEngine, clear_fn_cache, fn_cache_info,
+                                generate, generate_legacy, set_fn_cache_limit)
+from repro.serve.pages import PageAllocator, PoolExhausted, pages_for
 from repro.serve.scheduler import FCFSScheduler, Request
 
 __all__ = ["ServeEngine", "FCFSScheduler", "Request", "generate",
-           "generate_legacy", "fn_cache_info"]
+           "generate_legacy", "fn_cache_info", "set_fn_cache_limit",
+           "clear_fn_cache", "PageAllocator", "PoolExhausted", "pages_for"]

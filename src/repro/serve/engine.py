@@ -1,14 +1,37 @@
-"""Continuous-batching serve engine with a slot-based KV cache.
+"""Continuous-batching serve engine: slot KV cache, paged pool, bucketed prefill.
 
-``ServeEngine`` compiles prefill/decode ONCE per (cfg, max_len, num_slots)
-— the jitted closures live in a module-level cache keyed on the static
-configuration, so fresh engine instances (and the legacy ``generate`` path)
-never pay compile time twice. The engine owns a persistent slot-based KV
-cache with per-slot position/finished state: requests with different prompt
-lengths are admitted into free slots as others finish (continuous
-batching), EOS terminates a slot on-device, and decode runs as a jitted
-fixed-chunk ``lax.scan`` with a single host sync per chunk instead of per
-token.
+``ServeEngine`` compiles prefill/decode ONCE per static configuration — the
+jitted closures live in a bounded module-level LRU cache — so fresh engine
+instances (and the legacy ``generate`` path) never pay compile time twice.
+The engine owns a persistent slot-based KV cache with per-slot position and
+on-device finished state: requests with different prompt lengths are
+admitted into free slots as others finish (continuous batching), EOS
+terminates a slot on-device, and decode runs as a jitted fixed-chunk
+``lax.scan`` with a single host sync per chunk instead of per token.
+
+Two KV layouts:
+
+- ``kv_layout="dense"`` (default): every slot owns a ``max_len`` cache row.
+- ``kv_layout="paged"``: K/V live in a shared page pool sized by
+  ``num_pages`` and each slot maps positions through a page table
+  (serve/pages.py + lm.init_paged_cache). Cache memory scales with live
+  tokens instead of ``num_slots * max_len``; when the pool runs dry the
+  engine admits what fits and leaves the rest queued (admission
+  backpressure) instead of failing. Supported for plain GQA/MHA dense and
+  moe stacks; a no-op for ssm (no length-indexed KV); other families raise.
+
+Prefill is prompt-length-BUCKETED for dense/moe: prompts are right-padded
+to the smallest bucket in {min_bucket, 2*min_bucket, ..., max_len} and
+admission groups are padded to ``num_slots`` rows, so the prefill compile
+count is bounded by ``len(prefill_buckets)`` — not by the number of
+distinct prompt lengths (lm.prefill gathers each row's logits at its true
+``lengths - 1``; causal attention makes the pad tokens inert). Long
+prefills can additionally be CHUNKED (``prefill_chunk=N``): the bucket is
+prefilled N tokens per engine step, interleaved between decode chunks, so
+a long prompt never stalls resident decodes for its whole prefill.
+Families without a length-indexed KV cache (ssm/hybrid/vlm/encdec, and
+EP-MoE whose routing sees pad rows) keep the legacy exact-length
+signature-grouped admission path.
 
 Used by the examples, the synthetic-math evaluator (the GSM8K-protocol
 proxy: zero-shot greedy decoding, temperature 0), the serve launcher, and
@@ -18,6 +41,8 @@ signature and reproduces the legacy outputs exactly.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
+
 import numpy as np
 
 import jax
@@ -25,16 +50,34 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import registry
+from repro.serve.pages import PageAllocator, PoolExhausted, pages_for
 from repro.serve.scheduler import FCFSScheduler, Request
 
 # ------------------------------------------------------ compiled-fn caching
 #
 # jax.jit caches on function identity: rebuilding a closure per call (the
 # pre-engine behavior) recompiles every time. All jitted serving closures
-# are built once per static key and reused process-wide.
+# are built once per static key and reused process-wide. The cache is a
+# bounded LRU: a long-lived server that cycles through many configurations
+# (or bucket sizes) evicts the coldest closure instead of growing without
+# bound. The default limit comfortably covers one engine's full key set
+# (buckets + chunk shapes + decode); size it up for multi-model servers.
 
-_FN_CACHE: dict = {}
-_FN_STATS = {"hits": 0, "misses": 0}
+_FN_CACHE: OrderedDict = OrderedDict()
+_FN_LIMIT = 64
+_FN_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+
+
+def set_fn_cache_limit(limit: int) -> None:
+    """Bound the compiled-fn LRU to ``limit`` entries (evicts immediately
+    if already over)."""
+    global _FN_LIMIT
+    if limit < 1:
+        raise ValueError(f"fn-cache limit must be >= 1, got {limit}")
+    _FN_LIMIT = int(limit)
+    while len(_FN_CACHE) > _FN_LIMIT:
+        _FN_CACHE.popitem(last=False)
+        _FN_STATS["evictions"] += 1
 
 
 def _cached_fn(key, build):
@@ -42,21 +85,25 @@ def _cached_fn(key, build):
     if fn is None:
         fn = _FN_CACHE[key] = build()
         _FN_STATS["misses"] += 1
+        while len(_FN_CACHE) > _FN_LIMIT:
+            _FN_CACHE.popitem(last=False)
+            _FN_STATS["evictions"] += 1
     else:
+        _FN_CACHE.move_to_end(key)
         _FN_STATS["hits"] += 1
     return fn
 
 
 def fn_cache_info() -> dict:
-    """{hits, misses, size} of the process-wide compiled-fn cache. A stable
-    ``misses`` count across calls means nothing was rebuilt (and therefore
-    nothing recompiled)."""
-    return dict(_FN_STATS, size=len(_FN_CACHE))
+    """{hits, misses, evictions, size, limit} of the process-wide
+    compiled-fn cache. A stable ``misses`` count across calls means nothing
+    was rebuilt (and therefore nothing recompiled)."""
+    return dict(_FN_STATS, size=len(_FN_CACHE), limit=_FN_LIMIT)
 
 
 def clear_fn_cache() -> None:
     _FN_CACHE.clear()
-    _FN_STATS.update(hits=0, misses=0)
+    _FN_STATS.update(hits=0, misses=0, evictions=0)
 
 
 def make_decode_fn(cfg: ModelConfig, *, mesh=None, batch_axes=("data",)):
@@ -99,6 +146,26 @@ def _next_pow2(n: int) -> int:
     return p
 
 
+def _admit_pad_size(g: int, moe_impl: str) -> int:
+    """Padded row count for a legacy admission group of ``g`` requests:
+    next power of two (bounds prefill compile keys to log2(num_slots) per
+    signature). EP MoE is exempt — its expert-capacity buckets depend on
+    the batch's total token count, so duplicated pad rows would perturb
+    the real rows' routing."""
+    return g if moe_impl == "ep" else _next_pow2(g)
+
+
+def _make_buckets(max_len: int, min_bucket: int = 16) -> tuple[int, ...]:
+    """Prompt-length buckets: powers of two from ``min_bucket`` up, capped
+    at ``max_len`` (the last bucket is exactly max_len)."""
+    buckets, b = [], min_bucket
+    while b < max_len:
+        buckets.append(b)
+        b *= 2
+    buckets.append(max_len)
+    return tuple(buckets)
+
+
 def _prompt_prefix(cfg: ModelConfig, batch: dict) -> int:
     """Non-token cache positions a prompt occupies (vlm patch prefix).
     Batch-derived, not cfg-derived: a vlm batch without patch_embeds
@@ -123,33 +190,36 @@ def _sample(logits, temperature: float, keys):
 
 
 class ServeEngine:
-    """Slot-based continuous-batching engine.
-
-    The KV cache has ``num_slots`` rows; each slot holds at most one
-    in-flight request with its own position (``cache["pos"]`` [B]) and
-    on-device finished flag. Admission batches same-shape pending requests
-    (FCFS), prefills them in one call, and scatters the new rows into free
-    slots (``insert_slots``); group sizes are padded up to a power of two
-    with the pad rows scattered to the out-of-range slot index (dropped),
-    bounding prefill compile keys to log2(num_slots) per prompt shape.
+    """Slot-based continuous-batching engine (see module docstring for the
+    KV layouts and the bucketed/chunked prefill scheme).
 
     ``submit`` then ``step`` drive it incrementally; ``run`` drains a whole
     request list. Arrivals are measured in engine steps (one ``step`` = one
-    admission pass + one decode chunk).
+    prefill chunk (if a job is active) + one admission pass + one decode
+    chunk).
 
     Caveat: with ``moe_impl="ep"`` on a mesh, expert capacity buckets depend
     on the batch's token count, so (as with any capacity-routed MoE under
     rebatching) a request's tokens can depend on what shares its decode
-    batch; admission groups are never pow2-padded for ep configs.
+    batch; admission groups are never padded for ep configs and ep stays on
+    the legacy exact-length admission path.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, max_len: int,
                  num_slots: int, eos_id: int | None = None, pad_id: int = 0,
                  decode_chunk: int = 8, temperature: float = 0.0,
                  rng: jax.Array | None = None, mesh=None,
-                 batch_axes=("data",)):
+                 batch_axes=("data",), kv_layout: str = "dense",
+                 page_size: int = 16, num_pages: int | None = None,
+                 prefill_chunk: int = 0, min_bucket: int = 16,
+                 prefill_rows: int = 1):
         if num_slots < 1:
             raise ValueError("num_slots must be >= 1")
+        if prefill_rows < 1:
+            raise ValueError("prefill_rows must be >= 1")
+        if kv_layout not in ("dense", "paged"):
+            raise ValueError(f"kv_layout must be 'dense' or 'paged', "
+                             f"got {kv_layout!r}")
         self.cfg, self.params = cfg, params
         self.model = registry.get(cfg)
         self.max_len, self.num_slots = int(max_len), int(num_slots)
@@ -160,7 +230,59 @@ class ServeEngine:
         self.mesh, self.batch_axes = mesh, tuple(batch_axes)
         self.scheduler = FCFSScheduler()
 
-        self.cache = self.model.init_cache(cfg, self.num_slots, self.max_len)
+        # bucketed prefill needs per-row logit gather over a padded batch
+        # (lm.prefill lengths=); only length-indexed-KV families support it,
+        # and EP-MoE must never see pad rows (routing is batch-coupled)
+        self._bucketed = (cfg.family in ("dense", "moe")
+                          and cfg.moe_impl != "ep")
+        self.prefill_buckets = (_make_buckets(self.max_len, min_bucket)
+                                if self._bucketed else ())
+        # bucketed admission prefills fixed [prefill_rows, bucket] batches
+        # (larger groups split across calls): one compile key per bucket,
+        # and small/stale groups don't pay num_slots rows of pad FLOPs
+        self.prefill_rows = min(int(prefill_rows), self.num_slots)
+
+        self.kv_layout = kv_layout
+        self.page_size = int(page_size)
+        self._alloc: PageAllocator | None = None
+        if kv_layout == "paged":
+            if cfg.family == "ssm":
+                # no length-indexed KV to page — identical to dense layout
+                self.cache = self.model.init_cache(cfg, self.num_slots,
+                                                   self.max_len)
+            else:
+                if cfg.moe_impl == "ep":
+                    raise ValueError(
+                        "kv_layout='paged' is not supported for "
+                        "moe_impl='ep': EP decode dispatch is mesh-coupled "
+                        "and stays on the dense cache path. Use "
+                        "kv_layout='dense' for ep configs.")
+                pps = pages_for(self.max_len, self.page_size)
+                self.num_pages = (int(num_pages) if num_pages is not None
+                                  else self.num_slots * pps)
+                # raises with the supported-family matrix if cfg can't page
+                self.cache = self.model.init_paged_cache(
+                    cfg, self.num_slots, self.max_len, self.page_size,
+                    self.num_pages)
+                self._alloc = PageAllocator(self.num_pages, self.num_slots,
+                                            pps)
+        else:
+            self.cache = self.model.init_cache(cfg, self.num_slots,
+                                               self.max_len)
+
+        self.prefill_chunk = int(prefill_chunk)
+        if self.prefill_chunk:
+            if not self._bucketed or cfg.use_mla:
+                raise ValueError(
+                    f"prefill_chunk is only supported for bucketed GQA/MHA "
+                    f"dense/moe serving (family={cfg.family!r}, "
+                    f"use_mla={cfg.use_mla}, moe_impl={cfg.moe_impl!r}); "
+                    f"use prefill_chunk=0 for this architecture")
+            if self.prefill_chunk & (self.prefill_chunk - 1):
+                raise ValueError(f"prefill_chunk must be a power of two "
+                                 f"(got {self.prefill_chunk}) so chunk "
+                                 f"shapes tile the pow2 buckets")
+
         self.finished = jnp.ones((self.num_slots,), bool)  # idle slots are inert
         self.last_tok = jnp.full((self.num_slots,), self.pad_id, jnp.int32)
         base = rng if rng is not None else jax.random.PRNGKey(0)
@@ -170,15 +292,20 @@ class ServeEngine:
         self._slot_req: list[Request | None] = [None] * self.num_slots
         self._out: dict[int, list[int]] = {}      # uid -> emitted tokens
         self._left: dict[int, int] = {}           # uid -> remaining budget
+        self._job: dict | None = None             # in-flight chunked prefill
         self.clock = 0                            # admission step counter
         self.stats = {"decode_chunks": 0, "decode_steps": 0, "prefills": 0,
-                      "admitted": 0, "completed": 0}
+                      "prefill_chunks": 0, "admitted": 0, "completed": 0,
+                      "backpressure": 0}
 
     # ---------------------------------------------------- compiled closures
 
     def _static_key(self) -> tuple:
         return (self.cfg, self.max_len, self.num_slots, self.eos_id,
-                self.pad_id, self.temperature, self.mesh, self.batch_axes)
+                self.pad_id, self.temperature, self.mesh, self.batch_axes,
+                self.kv_layout, self.page_size,
+                getattr(self, "num_pages", None),
+                getattr(self, "prefill_rows", 1))
 
     def _chunk_fn(self):
         # the build closure must capture only statics (no `self`): the jitted
@@ -215,11 +342,29 @@ class ServeEngine:
 
         return _cached_fn(key, build)
 
+    @staticmethod
+    def _tok0_bookkeeping(eos, temperature):
+        """Shared tail of every admission closure: sample the first token
+        and scatter per-slot state (pad rows carry the OOB slot index and
+        drop)."""
+        def finish(cache, slots, logits, last_tok, finished, keys, req_keys):
+            ks = jax.vmap(jax.random.split)(req_keys)
+            tok0 = _sample(logits, temperature, ks[:, 1])
+            fin0 = ((tok0 == eos) if eos is not None
+                    else jnp.zeros(tok0.shape, bool))
+            last_tok = last_tok.at[slots].set(tok0)
+            finished = finished.at[slots].set(fin0)
+            keys = keys.at[slots].set(ks[:, 0])
+            return cache, last_tok, finished, keys, tok0
+        return finish
+
     def _admit_fn(self, group_size: int, sig: tuple):
+        """Legacy exact-length admission (signature-grouped families)."""
         key = ("admit", group_size, sig) + self._static_key()
         model, cfg, max_len = self.model, self.cfg, self.max_len
         mesh, axes, eos = self.mesh, self.batch_axes, self.eos_id
         temperature = self.temperature
+        finish = self._tok0_bookkeeping(eos, temperature)
 
         def build():
             @jax.jit
@@ -228,22 +373,101 @@ class ServeEngine:
                 logits, new_cache = model.prefill(params, cfg, batch, max_len,
                                                   mesh=mesh, batch_axes=axes)
                 cache = model.insert_slots(cache, new_cache, slots)
-                ks = jax.vmap(jax.random.split)(req_keys)
-                tok0 = _sample(logits, temperature, ks[:, 1])
-                fin0 = ((tok0 == eos) if eos is not None
-                        else jnp.zeros(tok0.shape, bool))
-                last_tok = last_tok.at[slots].set(tok0)
-                finished = finished.at[slots].set(fin0)
-                keys = keys.at[slots].set(ks[:, 0])
-                return cache, last_tok, finished, keys, tok0
+                return finish(cache, slots, logits, last_tok, finished, keys,
+                              req_keys)
 
             return admit_fn
+
+        return _cached_fn(key, build)
+
+    def _admit_bucket_fn(self, bucket: int):
+        """Bucketed single-shot admission: one compile key per bucket (the
+        group is split/padded to fixed [prefill_rows, bucket] batches)."""
+        key = ("admitb", bucket) + self._static_key()
+        model, cfg, max_len = self.model, self.cfg, self.max_len
+        mesh, axes, eos = self.mesh, self.batch_axes, self.eos_id
+        temperature = self.temperature
+        paged = self._alloc is not None
+        # paged prefill builds its scratch at bucket length (the pool insert
+        # handles any source length); dense must match the cache row length
+        prefill_len = bucket if paged else max_len
+        finish = self._tok0_bookkeeping(eos, temperature)
+
+        def build():
+            @jax.jit
+            def admit_fn(params, cache, batch, slots, lengths, last_tok,
+                         finished, keys, req_keys):
+                logits, new_cache = model.prefill(
+                    params, cfg, batch, prefill_len, mesh=mesh,
+                    batch_axes=axes, lengths=lengths)
+                if paged:
+                    cache = model.insert_slots_paged(cache, new_cache, slots,
+                                                     lengths)
+                else:
+                    cache = model.insert_slots(cache, new_cache, slots)
+                return finish(cache, slots, logits, last_tok, finished, keys,
+                              req_keys)
+
+            return admit_fn
+
+        return _cached_fn(key, build)
+
+    def _prefill_chunk_fn(self, bucket: int, chunk: int):
+        key = ("pchunk", bucket, chunk) + self._static_key()
+        model, cfg = self.model, self.cfg
+        mesh, axes = self.mesh, self.batch_axes
+
+        def build():
+            @jax.jit
+            def chunk_prefill(params, tokens, scratch, start, lengths, last):
+                return model.prefill_chunk(params, cfg, tokens, scratch,
+                                           start, lengths, last, mesh=mesh,
+                                           batch_axes=axes)
+
+            return chunk_prefill
+
+        return _cached_fn(key, build)
+
+    def _prefill_final_fn(self, bucket: int):
+        """Insert a finished chunked-prefill scratch cache into the engine
+        cache and sample the first token."""
+        key = ("pfinal", bucket) + self._static_key()
+        model, cfg, max_len = self.model, self.cfg, self.max_len
+        eos, temperature = self.eos_id, self.temperature
+        paged = self._alloc is not None
+        finish = self._tok0_bookkeeping(eos, temperature)
+
+        def build():
+            @jax.jit
+            def final_fn(params, cache, scratch, slots, lengths, last_logits,
+                         last_tok, finished, keys, req_keys):
+                scratch2 = {**scratch, "pos": lengths}
+                if paged:
+                    cache = model.insert_slots_paged(cache, scratch2, slots,
+                                                     lengths)
+                else:
+                    if bucket < max_len:
+                        pad = [(0, 0), (0, 0), (0, max_len - bucket),
+                               (0, 0), (0, 0)]
+                        scratch2 = {**scratch2,
+                                    "k": jnp.pad(scratch2["k"], pad),
+                                    "v": jnp.pad(scratch2["v"], pad)}
+                    cache = model.insert_slots(cache, scratch2, slots)
+                return finish(cache, slots, last_logits, last_tok, finished,
+                              keys, req_keys)
+
+            return final_fn
 
         return _cached_fn(key, build)
 
     # ----------------------------------------------------------- lifecycle
 
     def submit(self, req: Request) -> None:
+        if req.prompt_len == 0:
+            raise ValueError(
+                f"request {req.uid}: empty prompt — the engine needs at "
+                f"least one prompt token to prefill. Prepend a BOS token "
+                f"for unconditional generation.")
         prefix = 0
         if self.cfg.family == "vlm" and "patch_embeds" in req.extras:
             prefix = int(np.asarray(req.extras["patch_embeds"]).shape[0])
@@ -253,14 +477,48 @@ class ServeEngine:
                 f"request {req.uid} needs {need} cache positions "
                 f"(prefix {prefix} + prompt {req.prompt_len} + "
                 f"{req.max_new_tokens} new) but max_len={self.max_len}")
+        if self._alloc is not None:
+            np_need = pages_for(need, self.page_size)
+            if np_need > self._alloc.num_pages:
+                raise PoolExhausted(
+                    f"request {req.uid} needs {np_need} pages "
+                    f"({need} positions / page_size {self.page_size}) but "
+                    f"the pool has {self._alloc.num_pages}; grow num_pages "
+                    f"— waiting cannot free enough")
         self.scheduler.submit(req)
 
     def _free_slots(self) -> list[int]:
-        return [i for i, r in enumerate(self._slot_req) if r is None]
+        job = set(self._job["slot_ids"]) if self._job else ()
+        return [i for i, r in enumerate(self._slot_req)
+                if r is None and i not in job]
 
     @property
     def num_active(self) -> int:
         return sum(r is not None for r in self._slot_req)
+
+    def _bucket_for(self, n: int) -> int:
+        for b in self.prefill_buckets:
+            if n <= b:
+                return b
+        raise ValueError(f"prompt length {n} exceeds the largest bucket "
+                         f"{self.prefill_buckets[-1]} (max_len)")
+
+    def _group_key(self, req: Request) -> tuple:
+        ex = tuple(sorted((k, np.asarray(v).shape)
+                          for k, v in req.extras.items()))
+        return (self._bucket_for(req.prompt_len), ex)
+
+    def _mirror_pages(self) -> None:
+        self.cache = {**self.cache,
+                      "pages": jnp.asarray(self._alloc.table)}
+
+    def kv_cache_bytes(self) -> int:
+        """Device bytes of the persistent serve cache (all leaves)."""
+        return int(sum(x.nbytes for x in jax.tree.leaves(self.cache)))
+
+    def page_pool_stats(self) -> dict | None:
+        """Allocator stats for the paged layout (None for dense/no-op)."""
+        return self._alloc.stats() if self._alloc is not None else None
 
     def _complete(self, slot: int, completed: list) -> None:
         req = self._slot_req[slot]
@@ -269,18 +527,35 @@ class ServeEngine:
         completed.append((req.uid, np.asarray(self._out.pop(req.uid),
                                               np.int32)))
         self._left.pop(req.uid, None)
+        if self._alloc is not None:
+            self._alloc.free(slot)
+            self._mirror_pages()
+
+    # ----------------------------------------------------------- admission
+
+    def _post_admit(self, group, slot_ids, tok0, completed) -> None:
+        tok0 = np.asarray(tok0)[:len(group)]
+        self.stats["admitted"] += len(group)
+        for req, slot, t in zip(group, slot_ids, tok0):
+            self._slot_req[slot] = req
+            self._out[req.uid] = [int(t)]
+            self._left[req.uid] = req.max_new_tokens - 1
+            if ((self.eos_id is not None and int(t) == self.eos_id)
+                    or self._left[req.uid] == 0):
+                self._complete(slot, completed)
 
     def _admit(self, group: list[Request], completed: list) -> None:
+        """Legacy exact-length admission (signature-grouped families): pad
+        the group to a power of two — duplicate rows, scattered to the
+        out-of-range slot index so insert_slots drops them — one prefill
+        compile per (pow2 size, prompt signature). EP MoE is exempt: its
+        capacity buckets depend on the batch's token count, so pad rows
+        would perturb the real rows' routing."""
         free = self._free_slots()
         g = len(group)
         assert g <= len(free)
         slot_ids = free[:g]
-        # pad the group to a power of two: duplicate rows, scattered to the
-        # out-of-range slot index so insert_slots drops them — one prefill
-        # compile per (pow2 size, prompt signature). EP MoE is exempt: its
-        # capacity buckets depend on the batch's token count, so pad rows
-        # would perturb the real rows' routing
-        gp = g if self.cfg.moe_impl == "ep" else _next_pow2(g)
+        gp = _admit_pad_size(g, self.cfg.moe_impl)
         tokens = np.stack([r.tokens for r in group]).astype(np.int32)
         extras = {k: np.stack([np.asarray(r.extras[k]) for r in group])
                   for k in group[0].extras}
@@ -291,40 +566,150 @@ class ServeEngine:
                                 mode="edge") for k, v in extras.items()}
         slots = np.asarray(slot_ids + [self.num_slots] * (gp - g), np.int32)
         batch = {"tokens": tokens, **extras}
-        if self.temperature > 0:
-            req_keys = jnp.stack(
-                [jax.random.fold_in(self._base_rng, r.uid) for r in group]
-                + [self._base_rng] * (gp - g))
-        else:
-            req_keys = jnp.zeros((gp,) + self.keys.shape[1:], self.keys.dtype)
+        req_keys = self._req_keys(group, gp)
 
         fn = self._admit_fn(gp, group[0].signature())
         self.cache, self.last_tok, self.finished, self.keys, tok0 = fn(
             self.params, self.cache, batch, slots, self.last_tok,
             self.finished, self.keys, req_keys)
         self.stats["prefills"] += 1
-        self.stats["admitted"] += g
+        self._post_admit(group, slot_ids, tok0, completed)
 
-        tok0 = np.asarray(tok0)[:g]
-        for req, slot, t in zip(group, slot_ids, tok0):
-            self._slot_req[slot] = req
-            self._out[req.uid] = [int(t)]
-            self._left[req.uid] = req.max_new_tokens - 1
-            if ((self.eos_id is not None and int(t) == self.eos_id)
-                    or self._left[req.uid] == 0):
-                self._complete(slot, completed)
+    def _req_keys(self, group, gp):
+        if self.temperature > 0:
+            return jnp.stack(
+                [jax.random.fold_in(self._base_rng, r.uid) for r in group]
+                + [self._base_rng] * (gp - len(group)))
+        return jnp.zeros((gp,) + self.keys.shape[1:], self.keys.dtype)
+
+    def _bucket_batch(self, group, slot_ids, rows):
+        """Pad a bucketed admission group to ``rows`` rows: [rows, bucket]
+        tokens, [rows] lengths/slots (pad rows -> OOB slot, dropped)."""
+        ns = self.num_slots
+        bucket = self._bucket_for(max(r.prompt_len for r in group))
+        g = len(group)
+        tokens = np.full((rows, bucket), self.pad_id, np.int32)
+        lengths = np.zeros((rows,), np.int32)
+        for i, r in enumerate(group):
+            tokens[i, :r.prompt_len] = r.tokens
+            lengths[i] = r.prompt_len
+        slots = np.asarray(list(slot_ids) + [ns] * (rows - g), np.int32)
+        return bucket, tokens, lengths, slots
+
+    def _reserve_pages(self, group, free) -> list[Request]:
+        """Admission backpressure: allocate pages FCFS; the first request
+        that doesn't fit (and everything behind it) goes back to the queue
+        head. Returns the admissible prefix."""
+        if self._alloc is None:
+            return group
+        fit = 0
+        for r, slot in zip(group, free):
+            need = pages_for(r.prompt_len + r.max_new_tokens, self.page_size)
+            if not self._alloc.can_allocate(need):
+                break
+            self._alloc.allocate(slot, need)
+            fit += 1
+        if fit < len(group):
+            self.scheduler.push_front(group[fit:])
+            self.stats["backpressure"] += len(group) - fit
+        if fit:
+            self._mirror_pages()
+        return group[:fit]
+
+    def _admit_bucketed(self, group, slot_ids, completed) -> None:
+        """Prefill the group in fixed [prefill_rows, bucket] batches: the
+        row count is static per bucket, so every group size reuses the one
+        compiled closure, and a lone late arrival doesn't pay num_slots
+        rows of pad-row FLOPs."""
+        rows = self.prefill_rows
+        # the whole group shares one bucket (the scheduler groups by it)
+        bucket = self._bucket_for(max(r.prompt_len for r in group))
+        fn = self._admit_bucket_fn(bucket)
+        for i in range(0, len(group), rows):
+            sub, sids = group[i:i + rows], slot_ids[i:i + rows]
+            _, tokens, lengths, slots = self._bucket_batch(sub, sids, rows)
+            req_keys = self._req_keys(sub, rows)
+            self.cache, self.last_tok, self.finished, self.keys, tok0 = fn(
+                self.params, self.cache, {"tokens": tokens}, slots, lengths,
+                self.last_tok, self.finished, self.keys, req_keys)
+            self.stats["prefills"] += 1
+            self._post_admit(sub, sids, tok0, completed)
+
+    def _start_job(self, group, slot_ids) -> None:
+        bucket, tokens, lengths, slots = self._bucket_batch(
+            group, slot_ids, self.num_slots)
+        scratch = self.model.init_cache(self.cfg, self.num_slots, bucket)
+        scratch = {"k": scratch["k"], "v": scratch["v"]}
+        self._job = {
+            "group": group, "slot_ids": slot_ids, "slots": slots,
+            "lengths": lengths, "tokens": tokens, "bucket": bucket,
+            "scratch": scratch, "start": 0,
+            "last": jnp.zeros((self.num_slots, self.cfg.padded_vocab_size),
+                              jnp.float32),
+        }
+        self.stats["prefills"] += 1
+
+    def _job_step(self, completed) -> None:
+        """Advance the in-flight chunked prefill by one chunk; finalize
+        (insert + first-token sample) when the bucket is fully prefilled."""
+        j = self._job
+        c = min(self.prefill_chunk, j["bucket"] - j["start"])
+        fn = self._prefill_chunk_fn(j["bucket"], c)
+        chunk = j["tokens"][:, j["start"]:j["start"] + c]
+        j["last"], j["scratch"] = fn(
+            self.params, chunk, j["scratch"], np.int32(j["start"]),
+            j["lengths"], j["last"])
+        j["start"] += c
+        self.stats["prefill_chunks"] += 1
+        if j["start"] < j["bucket"]:
+            return
+        self._job = None
+        req_keys = self._req_keys(j["group"], self.num_slots)
+        fn = self._prefill_final_fn(j["bucket"])
+        self.cache, self.last_tok, self.finished, self.keys, tok0 = fn(
+            self.params, self.cache, j["scratch"], j["slots"], j["lengths"],
+            j["last"], self.last_tok, self.finished, self.keys, req_keys)
+        self._post_admit(j["group"], j["slot_ids"], tok0, completed)
+
+    def _admission(self, completed) -> None:
+        """Admit runnable groups into free slots until slots/pages/queue run
+        out. At most one chunked-prefill job is in flight; while one is
+        active its slots are reserved and admission pauses."""
+        while self._job is None:
+            free = self._free_slots()
+            if not free:
+                return
+            key = self._group_key if self._bucketed else None
+            group = self.scheduler.next_group(len(free), now=self.clock,
+                                              key=key)
+            if not group:
+                return
+            if not self._bucketed:
+                self._admit(group, completed)
+                continue
+            admitted = self._reserve_pages(group, free)
+            if not admitted:
+                return  # pool pressure: wait for residents to free pages
+            slot_ids = free[:len(admitted)]
+            bucket = self._bucket_for(max(r.prompt_len for r in admitted))
+            if self.prefill_chunk and bucket > self.prefill_chunk:
+                self._start_job(admitted, slot_ids)
+            else:
+                self._admit_bucketed(admitted, slot_ids, completed)
+            if len(admitted) < len(group):
+                return  # backpressured tail is back at the queue head
+
+    # ---------------------------------------------------------------- step
 
     def step(self) -> list[tuple[int, np.ndarray]]:
-        """One engine step: admit every runnable same-shape group into free
-        slots, then run one jitted decode chunk (a single host sync).
-        Returns (uid, tokens) for requests completed this step."""
+        """One engine step: advance the chunked-prefill job (if any) by one
+        chunk, admit every runnable group into free slots, then run one
+        jitted decode chunk (a single host sync). Returns (uid, tokens) for
+        requests completed this step."""
         completed: list[tuple[int, np.ndarray]] = []
-        while True:
-            group = self.scheduler.next_group(len(self._free_slots()),
-                                              now=self.clock)
-            if not group:
-                break
-            self._admit(group, completed)
+        if self._job is not None:
+            self._job_step(completed)
+        self._admission(completed)
 
         if self.num_active:
             fn = self._chunk_fn()
@@ -354,7 +739,7 @@ class ServeEngine:
         for r in requests:
             self.submit(r)
         results: dict[int, np.ndarray] = {}
-        while self.scheduler.pending or self.num_active:
+        while self.scheduler.pending or self.num_active or self._job:
             for uid, toks in self.step():
                 results[uid] = toks
         return results

@@ -1,0 +1,126 @@
+"""Shared KV page pool: host-side page-table allocator for the serve engine.
+
+The paged KV layout replaces each slot's dense ``max_len`` cache row with a
+pool of fixed-size pages (``[num_pages, page_size, heads, dim]`` K/V arrays
+per layer, see ``models/lm.init_paged_cache``) plus a per-slot page table
+mapping virtual position ``s`` to pool page ``table[slot, s // page_size]``.
+Serve cache memory then scales with *live tokens* (pages actually backing
+admitted requests) instead of ``num_slots * max_len``.
+
+This module is the host side: ``PageAllocator`` owns the free list and the
+``[num_slots, pages_per_slot]`` table (numpy; mirrored to the device cache
+by the engine after every allocate/free). Unallocated table entries hold the
+``num_pages`` sentinel — device code drops writes through them (OOB scatter)
+and clamps reads (the gathered rows are masked by ``valid_len`` anyway), so
+a freed slot that keeps decoding (finished slots ride along in the decode
+chunk) can never corrupt a page that was handed to a new request.
+
+Exhaustion is not an error at admission time: the engine admits as many
+requests as the pool can back and leaves the rest queued (admission
+backpressure) — pages free as residents finish. A single request that could
+never fit (needs more pages than the whole pool) raises ``PoolExhausted``
+with the sizing math spelled out.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def pages_for(tokens: int, page_size: int) -> int:
+    """Number of pages backing ``tokens`` cache positions."""
+    return -(-int(tokens) // int(page_size))
+
+
+def default_num_pages(num_slots: int, max_len: int, page_size: int) -> int:
+    """Full-capacity pool: every slot can hold ``max_len`` tokens (the dense
+    footprint). Real deployments size below this and lean on backpressure."""
+    return num_slots * pages_for(max_len, page_size)
+
+
+class PoolExhausted(RuntimeError):
+    """A single request can never fit in the pool (vs transient pressure,
+    which the engine handles by queueing)."""
+
+
+class PageAllocator:
+    """Free-list allocator over ``num_pages`` pages with per-slot tables.
+
+    ``table``: [num_slots, pages_per_slot] i32, entry == ``num_pages`` means
+    unallocated (the device-side OOB sentinel). All methods are host-side and
+    O(pages touched); the engine mirrors ``table`` into the device cache
+    after every change.
+    """
+
+    def __init__(self, num_pages: int, num_slots: int, pages_per_slot: int):
+        if num_pages < 1:
+            raise ValueError(f"num_pages must be >= 1, got {num_pages}")
+        self.num_pages = int(num_pages)
+        self.num_slots = int(num_slots)
+        self.pages_per_slot = int(pages_per_slot)
+        self.table = np.full((num_slots, pages_per_slot), num_pages,
+                             np.int32)
+        self._free = list(range(num_pages - 1, -1, -1))  # pop() -> page 0 first
+        self._used = np.zeros((num_slots,), np.int32)
+        self.peak_live = 0
+
+    # ------------------------------------------------------------- queries
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def live_pages(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def utilization(self) -> float:
+        return self.live_pages / self.num_pages
+
+    def can_allocate(self, n_pages: int) -> bool:
+        return n_pages <= len(self._free)
+
+    # ----------------------------------------------------------- lifecycle
+
+    def allocate(self, slot: int, n_pages: int) -> None:
+        """Back ``slot`` with ``n_pages`` fresh pages. The caller checks
+        ``can_allocate`` first (transient pressure = backpressure, not an
+        error); an impossible request raises ``PoolExhausted``."""
+        if self._used[slot]:
+            raise RuntimeError(f"slot {slot} already holds "
+                               f"{self._used[slot]} pages (free it first)")
+        if n_pages > self.pages_per_slot:
+            raise PoolExhausted(
+                f"request needs {n_pages} pages but a slot maps at most "
+                f"{self.pages_per_slot} (pages_per_slot = ceil(max_len / "
+                f"page_size)); shrink the request or raise max_len")
+        if n_pages > self.num_pages:
+            raise PoolExhausted(
+                f"request needs {n_pages} pages but the whole pool has "
+                f"{self.num_pages}; grow num_pages (or page_size) — "
+                f"backpressure cannot help, no amount of waiting frees "
+                f"enough")
+        if n_pages > len(self._free):
+            raise RuntimeError(
+                f"pool pressure: need {n_pages} pages, {len(self._free)} "
+                f"free — the engine should have deferred this admission "
+                f"(can_allocate was false)")
+        for i in range(n_pages):
+            self.table[slot, i] = self._free.pop()
+        self._used[slot] = n_pages
+        self.peak_live = max(self.peak_live, self.live_pages)
+
+    def free(self, slot: int) -> None:
+        """Return ``slot``'s pages to the free list and sentinel its table
+        row (freed-slot decode writes must drop, see module docstring)."""
+        n = int(self._used[slot])
+        for i in range(n):
+            self._free.append(int(self.table[slot, i]))
+        self.table[slot, :] = self.num_pages
+        self._used[slot] = 0
+
+    def stats(self) -> dict:
+        return {"num_pages": self.num_pages,
+                "live_pages": self.live_pages,
+                "free_pages": self.free_pages,
+                "peak_live_pages": self.peak_live,
+                "utilization": self.utilization()}

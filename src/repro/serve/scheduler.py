@@ -70,16 +70,29 @@ class FCFSScheduler:
         """Arrival step of the head request (None if the queue is empty)."""
         return self._q[0].arrival if self._q else None
 
-    def next_group(self, free_slots: int, now: float = float("inf")) -> list[Request]:
+    def push_front(self, reqs) -> None:
+        """Return ``reqs`` (in order) to the HEAD of the queue — admission
+        backpressure puts un-admittable requests back without losing their
+        FCFS position."""
+        for r in reversed(list(reqs)):
+            self._q.appendleft(r)
+
+    def next_group(self, free_slots: int, now: float = float("inf"),
+                   key=None) -> list[Request]:
         """Pop up to ``free_slots`` consecutive head-of-queue requests that
-        share the head's signature and have ``arrival <= now``."""
+        share the head's group key and have ``arrival <= now``. ``key``
+        (Request -> hashable) defaults to ``Request.signature`` (exact
+        prompt shape); the bucketed engine passes a coarser
+        bucket-of-prompt-length key so mixed-length prompts batch into one
+        prefill."""
+        keyf = key if key is not None else (lambda r: r.signature())
         if free_slots <= 0 or not self._q or self._q[0].arrival > now:
             return []
-        sig = self._q[0].signature()
+        sig = keyf(self._q[0])
         group: list[Request] = []
         while self._q and len(group) < free_slots:
             r = self._q[0]
-            if r.arrival > now or r.signature() != sig:
+            if r.arrival > now or keyf(r) != sig:
                 break
             group.append(self._q.popleft())
         return group

@@ -1,0 +1,125 @@
+"""Property tests for the serving scheduler and admission sizing policy:
+FCFS order is preserved under grouping and backpressure push-front, group
+sizes respect the free-slot cap, pow2 padding is tight, buckets cover every
+admissible prompt length, and EP MoE is exempt from pad rows.
+
+Runs under real Hypothesis when installed, else the deterministic shim.
+"""
+import numpy as np
+from _hypothesis_shim import given, settings, st
+
+from repro.serve.engine import (_admit_pad_size, _make_buckets, _next_pow2)
+from repro.serve.scheduler import FCFSScheduler, Request
+
+
+def _requests(rnd_seed, n, max_len=24):
+    rng = np.random.default_rng(rnd_seed)
+    lens = rng.integers(1, max_len + 1, n)
+    arrivals = np.sort(rng.integers(0, 4, n))
+    return [Request(uid=i, tokens=np.zeros(lens[i], np.int32),
+                    max_new_tokens=1, arrival=int(arrivals[i]))
+            for i in range(n)]
+
+
+def _drain(sch, free_slots, key=None):
+    groups = []
+    while sch.pending:
+        g = sch.next_group(free_slots, key=key)
+        assert g, "queue non-empty but no group admissible at now=inf"
+        groups.append(g)
+    return groups
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10**6), n=st.integers(1, 20),
+       free_slots=st.integers(1, 8))
+def test_grouping_preserves_fcfs_order(seed, n, free_slots):
+    """Draining the queue group-by-group yields every request exactly once,
+    in submission order — grouping never reorders across the FCFS line."""
+    reqs = _requests(seed, n)
+    sch = FCFSScheduler()
+    for r in reqs:
+        sch.submit(r)
+    groups = _drain(sch, free_slots)
+    uids = [r.uid for g in groups for r in g]
+    assert uids == [r.uid for r in reqs]
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10**6), n=st.integers(1, 20),
+       free_slots=st.integers(0, 8),
+       bucketed=st.sampled_from([False, True]))
+def test_group_respects_cap_and_shares_key(seed, n, free_slots, bucketed):
+    """Every group fits the free-slot cap and is key-homogeneous, under
+    both the exact-signature key and the coarser bucket key the bucketed
+    engine passes."""
+    buckets = _make_buckets(32)
+    keyf = ((lambda r: next(b for b in buckets if r.prompt_len <= b))
+            if bucketed else None)
+    sch = FCFSScheduler()
+    for r in _requests(seed, n):
+        sch.submit(r)
+    if free_slots == 0:
+        assert sch.next_group(0) == []
+        return
+    for g in _drain(sch, free_slots, key=keyf):
+        assert 1 <= len(g) <= free_slots
+        kf = keyf or (lambda r: r.signature())
+        assert len({kf(r) for r in g}) == 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10**6), n=st.integers(2, 20),
+       k=st.integers(1, 6))
+def test_push_front_restores_fcfs_position(seed, n, k):
+    """Backpressure: popping a group and pushing an un-admittable tail back
+    leaves the queue exactly as if the tail had never been popped."""
+    reqs = _requests(seed, n)
+    sch = FCFSScheduler()
+    for r in reqs:
+        sch.submit(r)
+    g = sch.next_group(free_slots=min(k + 1, n))
+    keep, tail = g[:1], g[1:]
+    sch.push_front(tail)
+    rest = [r.uid for r in tail] + [r.uid for gg in _drain(sch, 8)
+                                    for r in gg][len(tail):]
+    assert [r.uid for r in keep] + rest == [r.uid for r in reqs]
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(1, 4096))
+def test_next_pow2_is_tight(n):
+    p = _next_pow2(n)
+    assert p >= n and p & (p - 1) == 0, (n, p)
+    assert p < 2 * n  # tight: halving it would undershoot
+
+
+@settings(max_examples=30, deadline=None)
+@given(max_len=st.integers(2, 4096), min_bucket=st.sampled_from([8, 16, 32]))
+def test_buckets_cover_all_prompt_lengths(max_len, min_bucket):
+    """Buckets are strictly increasing, end exactly at max_len, and every
+    prompt length in [1, max_len] maps to the smallest covering bucket."""
+    buckets = _make_buckets(max_len, min_bucket)
+    assert list(buckets) == sorted(set(buckets))
+    assert buckets[-1] == max_len
+    for b in buckets[:-1]:
+        assert b & (b - 1) == 0 and b >= min_bucket
+    for ln in (1, max_len // 2, max_len):
+        b = next(bb for bb in buckets if ln <= bb)
+        assert ln <= b
+        smaller = [bb for bb in buckets if bb < b]
+        assert not smaller or smaller[-1] < ln  # smallest covering bucket
+
+
+@settings(max_examples=30, deadline=None)
+@given(g=st.integers(1, 64),
+       moe_impl=st.sampled_from(["dense", "ep"]))
+def test_ep_moe_exempt_from_pad_rows(g, moe_impl):
+    """Legacy admission pads groups to pow2 — except EP MoE, whose
+    expert-capacity buckets depend on the batch token count, so it must
+    see exactly the submitted rows."""
+    gp = _admit_pad_size(g, moe_impl)
+    if moe_impl == "ep":
+        assert gp == g
+    else:
+        assert gp == _next_pow2(g) and gp >= g

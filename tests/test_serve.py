@@ -158,7 +158,8 @@ def test_math_accuracy_chunks_and_compiles_once():
     assert info2["misses"] == info1["misses"], (info1, info2)
     # each cached closure was jit-compiled for exactly one shape set
     for key, fn in engine_mod._FN_CACHE.items():
-        if key[0] in ("admit", "chunk") and hasattr(fn, "_cache_size"):
+        if (key[0] in ("admit", "admitb", "chunk", "pchunk", "pfinal")
+                and hasattr(fn, "_cache_size")):
             assert fn._cache_size() == 1, key
     # memory scales with batch_size: a different slot count, same answers
     acc3 = math_accuracy(params, cfg, task, num_problems=8, batch_size=8)
@@ -191,3 +192,186 @@ def test_engine_temperature_sampling_is_per_slot():
                            temperature=0.8, rng=jax.random.PRNGKey(2))
     solo = solo_eng.run([Request(uid=1, tokens=toks[1], max_new_tokens=6)])
     np.testing.assert_array_equal(full[1], solo[1])
+
+
+# ----------------------------------------------------- paged KV + bucketing
+
+
+def _mixed_requests(cfg, seed=7, max_new=8):
+    """Mixed-length staggered workload (the paged/bucketed stress shape).
+
+    The ssm prefill scan needs prompt lengths <= ssm_chunk or a multiple of
+    it (pre-existing constraint of the exact-length legacy admit path), so
+    the ssm arch gets a compatible length mix.
+    """
+    rng = np.random.default_rng(seed)
+    lens = ([8, 16, 8, 12, 32, 5] if cfg.family == "ssm"
+            else [8, 21, 8, 16, 30, 5])
+    arrivals = [0, 0, 1, 2, 3, 4]
+    toks = [rng.integers(1, cfg.vocab_size, (n,)).astype(np.int32)
+            for n in lens]
+    return lambda: [Request(uid=i, tokens=toks[i], max_new_tokens=max_new,
+                            arrival=arrivals[i]) for i in range(len(lens))]
+
+
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+def test_paged_engine_matches_dense_engine(arch):
+    """kv_layout='paged' must be token-exact vs the dense engine for a
+    mixed-length staggered workload — including under pool pressure, where
+    admission backpressure queues requests until pages free."""
+    cfg = get_smoke_config(arch).replace(ssm_chunk=16)
+    params = _params(cfg)
+    mk = _mixed_requests(cfg)
+    kw = dict(max_len=40, num_slots=3, decode_chunk=4)
+    dense = ServeEngine(cfg, params, **kw).run(mk())
+    peng = ServeEngine(cfg, params, kv_layout="paged", page_size=4, **kw)
+    paged = peng.run(mk())
+    assert set(paged) == set(dense)
+    for uid in dense:
+        np.testing.assert_array_equal(paged[uid], dense[uid],
+                                      err_msg=f"request {uid}")
+    if cfg.family == "ssm":
+        assert peng.page_pool_stats() is None  # paging is a no-op
+        return
+    assert peng.page_pool_stats()["peak_live_pages"] > 0
+    assert peng.page_pool_stats()["live_pages"] == 0  # all freed on finish
+    # undersized pool: same tokens, strictly smaller cache, backpressure
+    seng = ServeEngine(cfg, params, kv_layout="paged", page_size=4,
+                       num_pages=12, **kw)
+    small = seng.run(mk())
+    for uid in dense:
+        np.testing.assert_array_equal(small[uid], dense[uid])
+    assert seng.kv_cache_bytes() < ServeEngine(cfg, params,
+                                               **kw).kv_cache_bytes()
+    assert seng.stats["backpressure"] > 0
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "qwen3-moe-30b-a3b"])
+@pytest.mark.parametrize("kv_layout", ["dense", "paged"])
+def test_chunked_prefill_matches_single_shot(arch, kv_layout):
+    """prefill_chunk=N (interleaved chunked prefill) must reproduce the
+    single-shot engine token-for-token."""
+    cfg = get_smoke_config(arch).replace(ssm_chunk=16)
+    params = _params(cfg)
+    mk = _mixed_requests(cfg)
+    kw = dict(max_len=40, num_slots=3, decode_chunk=4, kv_layout=kv_layout,
+              page_size=4)
+    single = ServeEngine(cfg, params, **kw).run(mk())
+    ceng = ServeEngine(cfg, params, prefill_chunk=8, **kw)
+    chunked = ceng.run(mk())
+    assert set(chunked) == set(single)
+    for uid in single:
+        np.testing.assert_array_equal(chunked[uid], single[uid],
+                                      err_msg=f"request {uid}")
+    # the len-30 prompt buckets to 32 -> 4 chunks of 8
+    assert ceng.stats["prefill_chunks"] >= 4, ceng.stats
+
+
+def test_prefill_compile_count_bounded_by_buckets():
+    """Bucketed admission: many distinct prompt lengths, at most one
+    prefill closure per bucket (each jit-compiled for exactly one shape)."""
+    cfg = TINY
+    params = _params(cfg)
+    before = set(engine_mod._FN_CACHE)
+    eng = ServeEngine(cfg, params, max_len=48, num_slots=4, decode_chunk=4)
+    rng = np.random.default_rng(2)
+    reqs = [Request(uid=i, tokens=rng.integers(1, cfg.vocab_size, (n,)),
+                    max_new_tokens=6)
+            for i, n in enumerate([3, 5, 7, 9, 11, 17, 23, 29, 31, 40])]
+    eng.run(reqs)
+    new_admits = [k for k in engine_mod._FN_CACHE
+                  if k not in before and k[0] == "admitb"]
+    assert len(new_admits) <= len(eng.prefill_buckets), (
+        new_admits, eng.prefill_buckets)
+    for k in new_admits:
+        assert engine_mod._FN_CACHE[k]._cache_size() == 1, k
+
+
+def test_submit_rejects_zero_length_prompt():
+    eng = ServeEngine(TINY, _params(TINY), max_len=16, num_slots=1)
+    req = Request(uid=0, tokens=np.ones(4, np.int32), max_new_tokens=2)
+    req.tokens = np.zeros((0,), np.int32)  # bypass Request validation
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(req)
+
+
+def test_pool_exhausted_vs_backpressure():
+    """A request that can NEVER fit raises PoolExhausted at submit;
+    transient pressure only queues (and completes)."""
+    from repro.serve.pages import PoolExhausted
+    cfg = TINY
+    params = _params(cfg)
+    eng = ServeEngine(cfg, params, max_len=32, num_slots=4,
+                      kv_layout="paged", page_size=4, num_pages=5)
+    # 8 prompt + 20 new = 28 positions = 7 pages > 5-page pool
+    with pytest.raises(PoolExhausted, match="grow num_pages"):
+        eng.submit(Request(uid=9, tokens=np.ones(8, np.int32),
+                           max_new_tokens=20))
+    # three 4-page requests against 5 pages: admitted one at a time
+    rng = np.random.default_rng(4)
+    toks = [rng.integers(1, cfg.vocab_size, (8,)) for _ in range(3)]
+    res = eng.run([Request(uid=i, tokens=toks[i], max_new_tokens=8)
+                   for i in range(3)])
+    assert eng.stats["backpressure"] > 0
+    deng = ServeEngine(cfg, params, max_len=32, num_slots=4)
+    dres = deng.run([Request(uid=i, tokens=toks[i], max_new_tokens=8)
+                     for i in range(3)])
+    for uid in dres:
+        np.testing.assert_array_equal(res[uid], dres[uid])
+
+
+def test_paged_rejects_unsupported_family():
+    cfg = TINY.replace(use_mla=True, kv_lora_rank=16, qk_rope_head_dim=8,
+                       qk_nope_head_dim=8, v_head_dim=16)
+    with pytest.raises(ValueError, match="paged KV cache is not supported"):
+        ServeEngine(cfg, None, max_len=16, num_slots=1, kv_layout="paged")
+
+
+def test_fn_cache_lru_eviction():
+    """The compiled-fn cache is a bounded LRU: over-limit inserts evict the
+    coldest entry and count it."""
+    from repro.serve.engine import make_prefill_fn, set_fn_cache_limit
+    old_limit = engine_mod._FN_LIMIT
+    try:
+        set_fn_cache_limit(2)
+        ev0 = engine_mod.fn_cache_info()["evictions"]
+        for ml in (101, 102, 103, 104):
+            make_prefill_fn(TINY, ml)
+        info = engine_mod.fn_cache_info()
+        assert info["size"] <= 2
+        assert info["evictions"] > ev0
+        # most-recent key survives, oldest was evicted
+        assert any(k[0] == "prefill" and k[2] == 104
+                   for k in engine_mod._FN_CACHE)
+        assert not any(k[0] == "prefill" and k[2] == 101
+                       for k in engine_mod._FN_CACHE)
+    finally:
+        set_fn_cache_limit(old_limit)
+
+
+def test_insert_slots_paged_routes_through_table():
+    """Rows land on their table's pages; pad slots and positions past the
+    row's length are dropped; pool pages of other slots are untouched."""
+    from repro.models import lm
+    cfg = TINY
+    params = _params(cfg)
+    batch = _prompts(cfg, 2, 8)
+    _, src = lm.prefill(params, cfg, batch, max_len=8)
+    ps, num_pages = 4, 6
+    cache = lm.init_paged_cache(cfg, 3, 16, ps, num_pages)
+    table = np.full((3, 4), num_pages, np.int32)
+    table[2, :2] = [5, 1]   # slot 2: pages 5 then 1
+    table[0, :2] = [0, 3]
+    cache = {**cache, "pages": jax.numpy.asarray(table)}
+    out = lm.insert_slots_paged(cache, src, np.array([2, 3], np.int32),
+                                np.array([6, 8], np.int32))
+    np.testing.assert_array_equal(np.asarray(out["pos"]), [0, 0, 6])
+    # slot 2 row 0: positions 0..3 -> page 5, positions 4..5 -> page 1
+    np.testing.assert_array_equal(np.asarray(out["k"][:, 5]),
+                                  np.asarray(src["k"][:, 0, :ps]))
+    np.testing.assert_array_equal(np.asarray(out["k"][:, 1, :2]),
+                                  np.asarray(src["k"][:, 0, ps:ps + 2]))
+    # positions >= length (6,7) dropped; row 1 (pad slot 3) dropped entirely
+    assert not np.asarray(out["k"][:, 1, 2:]).any()
+    for pg in (0, 2, 3, 4):
+        assert not np.asarray(out["k"][:, pg]).any(), pg
