@@ -25,6 +25,19 @@ Key metrics (direction-aware, default tolerance 20%, per-metric overrides):
     better). Deterministic (pure allocation arithmetic), so the tolerance
     is a tight 3%: with the committed pool at 31/64 pages (~0.485x) this
     keeps the ratio under the 0.5x contract.
+  * ``prefix_shared_goodput`` — engine goodput with the radix prefix cache
+    ON as a multiple of OFF, on a shared-prefix workload (serve table;
+    higher is better). The baseline is capped at 1.3 with a 0% tolerance:
+    the hard contract is "prefix sharing buys >= 1.3x on shared-prefix
+    traffic" (the committed run measures ~1.9x, so the floor has real
+    headroom), and being a ratio of two timings, CI noise largely cancels.
+  * ``preempt_vs_backpressure_goodput`` — engine goodput with
+    preempt-and-requeue vs plain backpressure on an oversubscribed page
+    pool (serve table; higher is better). Under strict FCFS requeue-at-head
+    preemption buys head-of-line fairness, not aggregate throughput, so
+    this is a parity guard against the requeue path decaying into
+    preempt/re-admit thrash (an undamped victim policy measured ~0.5x;
+    the damped one holds ~0.9x).
   * ``data_packed_kept`` — correctly-supervised completion-token fraction
     under greedy segment packing (data table; higher is better).
     Deterministic: any drop means the packer regressed.
@@ -80,6 +93,13 @@ KEY_METRICS = (
     ("paged_vs_dense_cache_bytes",
      lambda p: (p.get("serve_table") or {}).get("paged_vs_dense_cache_bytes"),
      -1, None, 0.03),
+    ("prefix_shared_goodput",
+     lambda p: (p.get("serve_table") or {}).get("prefix_shared_goodput"),
+     +1, 1.3, 0.0),
+    ("preempt_vs_backpressure_goodput",
+     lambda p: (p.get("serve_table") or {})
+     .get("preempt_vs_backpressure_goodput"),
+     +1, None, None),
     ("data_packed_kept",
      lambda p: (p.get("data_table") or {}).get("packed_kept"),
      +1, None, None),

@@ -5,6 +5,13 @@ utilization; runs any smoke arch (--arch).
   PYTHONPATH=src python examples/serve_batch.py --arch llama3.2-1b
   PYTHONPATH=src python examples/serve_batch.py --arch mamba2-2.7b
   PYTHONPATH=src python examples/serve_batch.py --kv-layout paged --page-size 8
+
+With ``--kv-layout paged`` a second section runs a GSM8K-style few-shot
+workload — every request shares the same long "few-shot examples" prefix
+and differs only in its short question — once with the radix prefix cache
+off and once on. On the cached run, each admission after the first aliases
+the shared prefix's pages copy-on-write and prefills only its question, so
+the prefix-hit counters and the prefill-token saving are directly visible.
 """
 import argparse
 import time
@@ -15,6 +22,7 @@ import numpy as np
 from repro.configs import get_smoke_config
 from repro.models import registry
 from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import Request
 
 
 def main():
@@ -60,13 +68,62 @@ def main():
     print(f"[{args.arch}] batch={args.batch} prompt={args.prompt_len} "
           f"new={args.new_tokens} kv_layout={args.kv_layout}")
     pool = engine.page_pool_stats()
-    util = (f"  pool {pool['peak_live_pages']}/{pool['num_pages']} pages "
-            f"({pool['peak_live_pages'] / pool['num_pages']:.0%} peak)"
+    util = (f"  pool high water {pool['high_water_pages']}/"
+            f"{pool['num_pages']} pages "
+            f"({pool['high_water_pages'] / pool['num_pages']:.0%} peak)"
             if pool is not None else "  pool n/a (dense layout)")
     print(f"  {args.batch * args.new_tokens / dt:8.1f} tok/s "
           f"({dt*1e3/args.new_tokens:.1f} ms/step)"
           f"  | cache {engine.kv_cache_bytes() / 1e6:.2f} MB |{util}")
     print(f"  sample: {out[0][:16].tolist()}")
+
+    if args.kv_layout == "paged" and pool is not None:
+        shared_prefix_demo(cfg, params, page_size=args.page_size)
+
+
+def shared_prefix_demo(cfg, params, *, page_size, num_requests=8,
+                       prefix_pages=6, question_len=7, new_tokens=8):
+    """GSM8K-style few-shot serving: one shared few-shot prefix, distinct
+    short questions, prefix cache off vs on (same tokens, fewer prefilled).
+
+    num_slots=2 keeps admissions trailing completions, so all but the first
+    couple of requests find the shared prefix already in the radix tree.
+    """
+    rng = np.random.default_rng(5)
+    fewshot = rng.integers(1, cfg.vocab_size,
+                           (prefix_pages * page_size,)).astype(np.int32)
+    questions = [rng.integers(1, cfg.vocab_size,
+                              (question_len,)).astype(np.int32)
+                 for _ in range(num_requests)]
+    prompts = [np.concatenate([fewshot, q]) for q in questions]
+    max_len = len(prompts[0]) + new_tokens
+    kw = dict(max_len=max_len, num_slots=2, decode_chunk=4,
+              kv_layout="paged", page_size=page_size, min_bucket=8)
+
+    def run(prefix_cache):
+        eng = ServeEngine(cfg, params, prefix_cache=prefix_cache, **kw)
+        t0 = time.perf_counter()
+        res = eng.run([Request(uid=i, tokens=prompts[i],
+                               max_new_tokens=new_tokens, arrival=i)
+                       for i in range(num_requests)])
+        return res, eng, time.perf_counter() - t0
+
+    run(False)  # warmup/compile both paths once
+    run(True)
+    off, off_eng, t_off = run(False)
+    on, on_eng, t_on = run(True)
+    assert all(np.array_equal(on[u], off[u]) for u in off)  # token-exact
+    s = on_eng.stats
+    print(f"[shared-prefix] {num_requests} requests x "
+          f"({prefix_pages * page_size} shared few-shot tokens + "
+          f"{question_len}-token question), identical outputs:")
+    print(f"  prefix cache off: {off_eng.stats['prefill_tokens']:5d} tokens "
+          f"prefilled, {sum(map(len, off.values())) / t_off:8.1f} tok/s")
+    print(f"  prefix cache on:  {s['prefill_tokens']:5d} tokens "
+          f"prefilled, {sum(map(len, on.values())) / t_on:8.1f} tok/s  "
+          f"({s['prefix_hits']} hits, {s['prefix_pages_shared']} pages "
+          f"aliased, pool high water "
+          f"{on_eng.page_pool_stats()['high_water_pages']} pages)")
 
 
 if __name__ == "__main__":

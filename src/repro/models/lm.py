@@ -522,13 +522,19 @@ def init_paged_cache(cfg: ModelConfig, batch_size: int, max_len: int,
     }
 
 
-def insert_slots_paged(cache: dict, src: dict, slots, lengths) -> dict:
+def insert_slots_paged(cache: dict, src: dict, slots, lengths,
+                       starts=None) -> dict:
     """Scatter a dense prefill cache (``src``: k/v [L, n, S, KVH, Dh]) into
     the page pools through the device-mirrored table ``cache["pages"]``.
     ``slots``: [n] i32 slot per row (entries == num_slots are admission
     padding — their writes drop); ``lengths``: [n] true prompt lengths —
     positions >= length route to the OOB sentinel and drop, so bucket-pad
-    garbage never reaches the pool."""
+    garbage never reaches the pool. ``starts`` (optional, [n] or scalar
+    i32): first position to write per row — positions below it also drop,
+    which is the prefix-cache aliased-page write rule: table entries below
+    ``start`` map to pages shared read-only with other slots (or the radix
+    tree) and must never be written through; the suffix scatter begins at
+    the slot's first private (or copied-on-write) page."""
     k_pool, v_pool = cache["k"], cache["v"]
     num_pages, ps = k_pool.shape[1], k_pool.shape[2]
     num_slots, maxp = cache["pages"].shape
@@ -542,6 +548,10 @@ def insert_slots_paged(cache: dict, src: dict, slots, lengths) -> dict:
     t = jnp.arange(s_max)
     page = tbl[:, jnp.minimum(t // ps, maxp - 1)]                # [n, s_max]
     ok = (t[None, :] < lengths[:, None]) & (t[None, :] // ps < maxp)
+    if starts is not None:
+        starts = jnp.broadcast_to(jnp.asarray(starts, jnp.int32),
+                                  lengths.shape)
+        ok = ok & (t[None, :] >= starts[:, None])
     page = jnp.where(ok, page, num_pages)
     off = jnp.broadcast_to(t % ps, page.shape)
     k_pool = k_pool.at[:, page, off].set(src["k"].astype(k_pool.dtype))

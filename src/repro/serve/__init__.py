@@ -1,9 +1,13 @@
-"""Serving subsystem: continuous-batching engine + paged KV pool + scheduler."""
+"""Serving subsystem: continuous-batching engine + paged KV pool + scheduler
++ radix prefix cache + background stream-out."""
 from repro.serve.engine import (ServeEngine, clear_fn_cache, fn_cache_info,
                                 generate, generate_legacy, set_fn_cache_limit)
 from repro.serve.pages import PageAllocator, PoolExhausted, pages_for
+from repro.serve.prefix_cache import PrefixCache
 from repro.serve.scheduler import FCFSScheduler, Request
+from repro.serve.streamout import StreamOut
 
 __all__ = ["ServeEngine", "FCFSScheduler", "Request", "generate",
            "generate_legacy", "fn_cache_info", "set_fn_cache_limit",
-           "clear_fn_cache", "PageAllocator", "PoolExhausted", "pages_for"]
+           "clear_fn_cache", "PageAllocator", "PoolExhausted", "pages_for",
+           "PrefixCache", "StreamOut"]

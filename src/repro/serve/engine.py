@@ -20,6 +20,31 @@ Two KV layouts:
   backpressure) instead of failing. Supported for plain GQA/MHA dense and
   moe stacks; a no-op for ssm (no length-indexed KV); other families raise.
 
+Three optional layers ride on the paged pool:
+
+- ``prefix_cache=True``: a host-side radix tree (serve/prefix_cache.py)
+  over page-granular token prefixes. Admission looks up the longest cached
+  prefix, aliases those pages read-only into the new slot's table
+  (refcounted — see serve/pages.py), and prefills ONLY the uncached suffix
+  (the bucketed prefill path gains a traced ``start`` offset). When the
+  whole prompt is cached the last matched page is copied-on-write before
+  the final-token recompute so a shared page is never written through.
+  Completed requests insert their prompt pages back into the tree under an
+  LRU cap with refcount-aware eviction.
+- ``preempt=True``: when the pool is exhausted and the FCFS head cannot
+  fit, the engine first evicts prefix-cache pages, then preempts the
+  resident with the most remaining budget — its private pages free (shared
+  prefix pages just decref), it requeues at the scheduler head carrying its
+  already-generated tokens (original arrival preserved), and re-admits via
+  the normal — prefix-accelerated, its own prompt+generated pages are
+  inserted into the tree first — prefill path. Re-admission is token-exact
+  vs the never-preempted run: greedy decoding is deterministic in the
+  context, and sampled decoding saves the slot's key at preemption so the
+  per-request key stream continues bit-exactly.
+- ``on_complete=...``: finished sequences hand off to a background
+  detokenize/stream-out worker (serve/streamout.py) so ``step()`` never
+  blocks on host-side decode.
+
 Prefill is prompt-length-BUCKETED for dense/moe: prompts are right-padded
 to the smallest bucket in {min_bucket, 2*min_bucket, ..., max_len} and
 admission groups are padded to ``num_slots`` rows, so the prefill compile
@@ -51,7 +76,9 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import registry
 from repro.serve.pages import PageAllocator, PoolExhausted, pages_for
+from repro.serve.prefix_cache import PrefixCache
 from repro.serve.scheduler import FCFSScheduler, Request
+from repro.serve.streamout import StreamOut
 
 # ------------------------------------------------------ compiled-fn caching
 #
@@ -212,7 +239,10 @@ class ServeEngine:
                  batch_axes=("data",), kv_layout: str = "dense",
                  page_size: int = 16, num_pages: int | None = None,
                  prefill_chunk: int = 0, min_bucket: int = 16,
-                 prefill_rows: int = 1):
+                 prefill_rows: int = 1, prefix_cache: bool = False,
+                 prefix_cache_pages: int | None = None,
+                 preempt: bool = False, on_complete=None,
+                 stream_out: bool = True):
         if num_slots < 1:
             raise ValueError("num_slots must be >= 1")
         if prefill_rows < 1:
@@ -270,6 +300,31 @@ class ServeEngine:
             self.cache = self.model.init_cache(cfg, self.num_slots,
                                                self.max_len)
 
+        self.preempt = bool(preempt)
+        if self.preempt and self._alloc is None:
+            raise ValueError(
+                "preempt=True requires kv_layout='paged' with a page pool "
+                "(preemption frees and re-acquires pages; the dense layout "
+                "has nothing to reclaim)")
+        self._prefix: PrefixCache | None = None
+        if prefix_cache:
+            if self._alloc is None or not self._bucketed or cfg.use_mla:
+                raise ValueError(
+                    f"prefix_cache=True requires kv_layout='paged' on a "
+                    f"bucketed GQA/MHA dense/moe stack (family="
+                    f"{cfg.family!r}, use_mla={cfg.use_mla}, moe_impl="
+                    f"{cfg.moe_impl!r}): suffix prefill reuses the chunked-"
+                    f"prefill machinery and page aliasing needs the pool")
+            cap = (int(prefix_cache_pages) if prefix_cache_pages is not None
+                   else self.num_pages // 2)
+            self._prefix = PrefixCache(self.page_size, cap,
+                                       self._alloc.incref, self._alloc.decref)
+
+        self._on_complete = on_complete
+        self._stream: StreamOut | None = (
+            StreamOut(on_complete)
+            if on_complete is not None and stream_out else None)
+
         self.prefill_chunk = int(prefill_chunk)
         if self.prefill_chunk:
             if not self._bucketed or cfg.use_mla:
@@ -292,11 +347,14 @@ class ServeEngine:
         self._slot_req: list[Request | None] = [None] * self.num_slots
         self._out: dict[int, list[int]] = {}      # uid -> emitted tokens
         self._left: dict[int, int] = {}           # uid -> remaining budget
+        self._resume: dict[int, dict] = {}        # uid -> preempted state
+        self._no_preempt: set[int] = set()        # slots admitted this step
         self._job: dict | None = None             # in-flight chunked prefill
         self.clock = 0                            # admission step counter
         self.stats = {"decode_chunks": 0, "decode_steps": 0, "prefills": 0,
                       "prefill_chunks": 0, "admitted": 0, "completed": 0,
-                      "backpressure": 0}
+                      "backpressure": 0, "preempted": 0, "prefix_hits": 0,
+                      "prefix_pages_shared": 0, "prefill_tokens": 0}
 
     # ---------------------------------------------------- compiled closures
 
@@ -412,6 +470,57 @@ class ServeEngine:
 
         return _cached_fn(key, build)
 
+    def _admit_prefix_fn(self, scratch_len: int, chunk: int):
+        """Prefix-cache admission (single row): COW-copy the boundary page
+        (``cow_dst == num_pages`` drops the copy), gather the aliased prefix
+        [0, start) from the page pools into a dense scratch, prefill only
+        the uncached suffix chunk (traced ``start`` — one compile per
+        (scratch_len, chunk) SHAPE, both pow2, not per offset), scatter
+        positions [start, length) back through the slot's table (shared
+        pages below ``start`` are never written), and sample token 0. A
+        prefix MISS is the same closure with start=0 over a zero scratch."""
+        key = ("padmit", scratch_len, chunk) + self._static_key()
+        model, cfg = self.model, self.cfg
+        mesh, axes, eos = self.mesh, self.batch_axes, self.eos_id
+        temperature = self.temperature
+        num_slots, num_pages = self.num_slots, self.num_pages
+        ps, nv = self.page_size, self.cfg.padded_vocab_size
+        finish = self._tok0_bookkeeping(eos, temperature)
+
+        def build():
+            @jax.jit
+            def admit_fn(params, cache, tokens, slots, start, lengths,
+                         cow_src, cow_dst, last_tok, finished, keys,
+                         req_keys):
+                # copy-on-write BEFORE the gather and the suffix scatter:
+                # the duplicated page carries the shared page's filled
+                # positions, then receives the recomputed final token's KV
+                src = jnp.minimum(cow_src, num_pages - 1)
+                k_pool = cache["k"].at[:, cow_dst].set(cache["k"][:, src])
+                v_pool = cache["v"].at[:, cow_dst].set(cache["v"][:, src])
+                cache = {**cache, "k": k_pool, "v": v_pool}
+                maxp = cache["pages"].shape[1]
+                tbl = cache["pages"][jnp.minimum(slots, num_slots - 1)]
+                t = jnp.arange(scratch_len)
+                page = jnp.clip(tbl[:, jnp.minimum(t // ps, maxp - 1)],
+                                0, num_pages - 1)                # [1, SL]
+                off = jnp.broadcast_to(t % ps, page.shape)
+                m = (t < start)[None, None, :, None, None]
+                scratch = {"k": jnp.where(m, k_pool[:, page, off], 0),
+                           "v": jnp.where(m, v_pool[:, page, off], 0)}
+                last0 = jnp.zeros((tokens.shape[0], nv), jnp.float32)
+                logits, scratch = model.prefill_chunk(
+                    params, cfg, tokens, scratch, start, lengths, last0,
+                    mesh=mesh, batch_axes=axes)
+                cache = model.insert_slots_paged(cache, scratch, slots,
+                                                 lengths, starts=start)
+                return finish(cache, slots, logits, last_tok, finished,
+                              keys, req_keys)
+
+            return admit_fn
+
+        return _cached_fn(key, build)
+
     def _prefill_chunk_fn(self, bucket: int, chunk: int):
         key = ("pchunk", bucket, chunk) + self._static_key()
         model, cfg = self.model, self.cfg
@@ -503,10 +612,27 @@ class ServeEngine:
         raise ValueError(f"prompt length {n} exceeds the largest bucket "
                          f"{self.prefill_buckets[-1]} (max_len)")
 
+    # Preempted requests requeue carrying their already-generated tokens:
+    # the EFFECTIVE prompt at re-admission is prompt + emitted-so-far, and
+    # the remaining budget is what was left at preemption. Every admission
+    # site (grouping, page reservation, batching, prefill) goes through
+    # these helpers so fresh and resumed requests share one code path.
+
+    def _eff_tokens(self, req: Request) -> np.ndarray:
+        res = self._resume.get(req.uid)
+        return res["tokens"] if res is not None else req.tokens
+
+    def _eff_len(self, req: Request) -> int:
+        return int(self._eff_tokens(req).shape[0])
+
+    def _budget_left(self, req: Request) -> int:
+        res = self._resume.get(req.uid)
+        return res["left"] if res is not None else req.max_new_tokens
+
     def _group_key(self, req: Request) -> tuple:
         ex = tuple(sorted((k, np.asarray(v).shape)
                           for k, v in req.extras.items()))
-        return (self._bucket_for(req.prompt_len), ex)
+        return (self._bucket_for(self._eff_len(req)), ex)
 
     def _mirror_pages(self) -> None:
         self.cache = {**self.cache,
@@ -520,16 +646,33 @@ class ServeEngine:
         """Allocator stats for the paged layout (None for dense/no-op)."""
         return self._alloc.stats() if self._alloc is not None else None
 
+    def _insert_prefix_pages(self, slot: int, tokens, covered: int) -> None:
+        """Insert ``slot``'s pages for the fully-written full-page prefix of
+        ``tokens`` (``covered`` positions hold valid KV) into the radix
+        tree. Called BEFORE the slot's free so the pages are still live —
+        the tree's incref keeps them across the decref."""
+        nfull = min(int(covered), len(tokens)) // self.page_size
+        if nfull:
+            pages = [int(p) for p in self._alloc.table[slot, :nfull]]
+            self._prefix.insert(tokens[:nfull * self.page_size], pages)
+
     def _complete(self, slot: int, completed: list) -> None:
         req = self._slot_req[slot]
         self._slot_req[slot] = None
         self.stats["completed"] += 1
-        completed.append((req.uid, np.asarray(self._out.pop(req.uid),
-                                              np.int32)))
+        toks = np.asarray(self._out.pop(req.uid), np.int32)
+        completed.append((req.uid, toks))
         self._left.pop(req.uid, None)
         if self._alloc is not None:
+            if self._prefix is not None:
+                self._insert_prefix_pages(slot, req.tokens, req.prompt_len)
             self._alloc.free(slot)
             self._mirror_pages()
+        if self._on_complete is not None:
+            if self._stream is not None:
+                self._stream.put(req.uid, toks)   # worker detokenizes
+            else:
+                self._on_complete(req.uid, toks)  # stream_out=False: inline
 
     # ----------------------------------------------------------- admission
 
@@ -538,8 +681,14 @@ class ServeEngine:
         self.stats["admitted"] += len(group)
         for req, slot, t in zip(group, slot_ids, tok0):
             self._slot_req[slot] = req
-            self._out[req.uid] = [int(t)]
-            self._left[req.uid] = req.max_new_tokens - 1
+            self._no_preempt.add(slot)  # just admitted: no KV written yet
+            res = self._resume.pop(req.uid, None)
+            if res is not None:
+                self._out[req.uid] = res["emitted"] + [int(t)]
+                self._left[req.uid] = res["left"] - 1
+            else:
+                self._out[req.uid] = [int(t)]
+                self._left[req.uid] = req.max_new_tokens - 1
             if ((self.eos_id is not None and int(t) == self.eos_id)
                     or self._left[req.uid] == 0):
                 self._complete(slot, completed)
@@ -573,38 +722,122 @@ class ServeEngine:
             self.params, self.cache, batch, slots, self.last_tok,
             self.finished, self.keys, req_keys)
         self.stats["prefills"] += 1
+        self.stats["prefill_tokens"] += sum(r.prompt_len for r in group)
         self._post_admit(group, slot_ids, tok0, completed)
 
     def _req_keys(self, group, gp):
+        """Per-request sampling keys. A resumed request continues from the
+        key saved at preemption: tok0 bookkeeping and the decode-chunk body
+        split identically (sample from split[1], carry split[0]), so the
+        sampled stream is bit-exact vs the never-preempted run."""
         if self.temperature > 0:
-            return jnp.stack(
-                [jax.random.fold_in(self._base_rng, r.uid) for r in group]
-                + [self._base_rng] * (gp - len(group)))
+            ks = []
+            for r in group:
+                res = self._resume.get(r.uid)
+                ks.append(jnp.asarray(res["key"]) if res is not None
+                          else jax.random.fold_in(self._base_rng, r.uid))
+            return jnp.stack(ks + [self._base_rng] * (gp - len(group)))
         return jnp.zeros((gp,) + self.keys.shape[1:], self.keys.dtype)
 
     def _bucket_batch(self, group, slot_ids, rows):
         """Pad a bucketed admission group to ``rows`` rows: [rows, bucket]
         tokens, [rows] lengths/slots (pad rows -> OOB slot, dropped)."""
         ns = self.num_slots
-        bucket = self._bucket_for(max(r.prompt_len for r in group))
+        bucket = self._bucket_for(max(self._eff_len(r) for r in group))
         g = len(group)
         tokens = np.full((rows, bucket), self.pad_id, np.int32)
         lengths = np.zeros((rows,), np.int32)
         for i, r in enumerate(group):
-            tokens[i, :r.prompt_len] = r.tokens
-            lengths[i] = r.prompt_len
+            toks = self._eff_tokens(r)
+            tokens[i, :len(toks)] = toks
+            lengths[i] = len(toks)
         slots = np.asarray(list(slot_ids) + [ns] * (rows - g), np.int32)
         return bucket, tokens, lengths, slots
 
+    # ------------------------------------------------- preempt-and-requeue
+
+    def _preempt_one(self, head_left: int | None = None) -> bool:
+        """Preempt the resident with the most remaining budget: free its
+        private pages (shared prefix pages just decref), save its resume
+        state, and requeue it at the scheduler head with its original
+        arrival. Slots admitted this step are exempt — their token-0 KV is
+        not written until the next decode chunk, so their pages hold an
+        incomplete prefix (and preempting a request to admit another would
+        thrash anyway).
+
+        Damping: when ``head_left`` (the remaining budget of the request
+        being admitted) is given, only residents with STRICTLY more budget
+        left are preemptible. Preemption then only ever moves pages from
+        longer-tailed work to shorter work, so a requeued victim can never
+        preempt its way straight back in (the ping-pong livelock of an
+        unconditional policy) — remaining work strictly decreases along any
+        preemption chain."""
+        best = None
+        for slot, req in enumerate(self._slot_req):
+            if req is None or slot in self._no_preempt:
+                continue
+            left = self._left[req.uid]
+            if head_left is not None and left <= head_left:
+                continue
+            if best is None or left > best[0]:
+                best = (left, slot)
+        if best is None:
+            return False
+        _, slot = best
+        req = self._slot_req[slot]
+        emitted = self._out.pop(req.uid)
+        left = self._left.pop(req.uid)
+        ctx = np.concatenate([req.tokens,
+                              np.asarray(emitted, np.int32)])
+        self._resume[req.uid] = {
+            "tokens": ctx, "emitted": emitted, "left": left,
+            # sampled decoding: the key stream continues from here
+            "key": (np.asarray(self.keys[slot])
+                    if self.temperature > 0 else None)}
+        if self._prefix is not None:
+            # positions [0, len(ctx)-1) hold valid KV (the newest emitted
+            # token was sampled but not yet fed back/written) — its full
+            # pages make the re-admission prefix-accelerated
+            self._insert_prefix_pages(slot, ctx, len(ctx) - 1)
+        self._slot_req[slot] = None
+        self._alloc.free(slot)
+        self._mirror_pages()
+        # inert on device: no more samples; sentinel table row drops writes
+        self.finished = self.finished.at[slot].set(True)
+        self.scheduler.push_front([req])
+        self.stats["preempted"] += 1
+        return True
+
+    def _reclaim(self, need: int, head_left: int | None = None) -> bool:
+        """Make room for an admission that needs ``need`` fresh pages:
+        first evict LRU prefix-cache pages (cheapest — cached KV is
+        recomputable), then preempt one resident with more remaining work
+        than the admittee (see ``_preempt_one``). Returns True if anything
+        was reclaimed (the caller loops until the request fits or this
+        gives up)."""
+        freed = False
+        if self._prefix is not None:
+            short = need - self._alloc.free_pages
+            if short > 0 and self._prefix.evict(short):
+                freed = True
+        if not self._alloc.can_allocate(need) and self.preempt:
+            freed = self._preempt_one(head_left) or freed
+        return freed
+
     def _reserve_pages(self, group, free) -> list[Request]:
-        """Admission backpressure: allocate pages FCFS; the first request
-        that doesn't fit (and everything behind it) goes back to the queue
-        head. Returns the admissible prefix."""
+        """Admission backpressure: allocate pages FCFS, reclaiming (prefix
+        eviction, then preemption) when a request doesn't fit; the first
+        request that still doesn't fit (and everything behind it) goes back
+        to the queue head. Returns the admissible prefix."""
         if self._alloc is None:
             return group
         fit = 0
         for r, slot in zip(group, free):
-            need = pages_for(r.prompt_len + r.max_new_tokens, self.page_size)
+            need = pages_for(self._eff_len(r) + self._budget_left(r),
+                             self.page_size)
+            while not self._alloc.can_allocate(need):
+                if not self._reclaim(need, self._budget_left(r)):
+                    break
             if not self._alloc.can_allocate(need):
                 break
             self._alloc.allocate(slot, need)
@@ -615,6 +848,69 @@ class ServeEngine:
         if fit:
             self._mirror_pages()
         return group[:fit]
+
+    # ------------------------------------------------ prefix-hit admission
+
+    def _admit_prefix(self, req: Request, slot: int, completed) -> bool:
+        """Admit one request through the radix prefix cache: alias the
+        longest cached prefix into the slot's table and prefill only the
+        uncached suffix. Returns False on backpressure (the request is back
+        at the queue head). COW boundary: a match is page-granular, so the
+        suffix start is page-aligned UNLESS the entire prompt is cached —
+        then the final token's logits must be recomputed (start = len-1,
+        mid-page) and the last matched page is duplicated first so the
+        shared copy is never written."""
+        ps = self.page_size
+        eff = self._eff_tokens(req)
+        length = len(eff)
+        matched = self._prefix.match(eff)
+        if matched and len(matched) * ps >= length:
+            aliased, cow_src = matched[:-1], int(matched[-1])
+            start = length - 1
+        else:
+            aliased, cow_src = matched, None
+            start = len(matched) * ps
+        need = pages_for(length + self._budget_left(req), ps)
+        n_fresh = need - len(aliased)
+        # pin the matched pages before reclaim can evict them out from
+        # under us (eviction of a tree-only page would free it for reuse)
+        for p in matched:
+            self._alloc.incref(p)
+        try:
+            while not self._alloc.can_allocate(n_fresh):
+                if not self._reclaim(n_fresh, self._budget_left(req)):
+                    break
+            if not self._alloc.can_allocate(n_fresh):
+                self.scheduler.push_front([req])
+                self.stats["backpressure"] += 1
+                return False
+            self._alloc.alias(slot, aliased, n_fresh)
+        finally:
+            for p in matched:
+                self._alloc.decref(p)
+        self._mirror_pages()
+        cow_dst = (int(self._alloc.table[slot, len(aliased)])
+                   if cow_src is not None else self.num_pages)
+
+        suffix = length - start
+        chunk = _next_pow2(suffix)
+        scratch_len = _next_pow2(max(length, start + chunk))
+        tokens = np.full((1, chunk), self.pad_id, np.int32)
+        tokens[0, :suffix] = eff[start:]
+        fn = self._admit_prefix_fn(scratch_len, chunk)
+        self.cache, self.last_tok, self.finished, self.keys, tok0 = fn(
+            self.params, self.cache, tokens, np.asarray([slot], np.int32),
+            np.int32(start), np.asarray([length], np.int32),
+            np.int32(cow_src if cow_src is not None else self.num_pages),
+            np.int32(cow_dst), self.last_tok, self.finished, self.keys,
+            self._req_keys([req], 1))
+        self.stats["prefills"] += 1
+        self.stats["prefill_tokens"] += suffix
+        if matched:
+            self.stats["prefix_hits"] += 1
+            self.stats["prefix_pages_shared"] += len(aliased)
+        self._post_admit([req], [slot], tok0, completed)
+        return True
 
     def _admit_bucketed(self, group, slot_ids, completed) -> None:
         """Prefill the group in fixed [prefill_rows, bucket] batches: the
@@ -633,6 +929,7 @@ class ServeEngine:
                 self.params, self.cache, {"tokens": tokens}, slots, lengths,
                 self.last_tok, self.finished, self.keys, req_keys)
             self.stats["prefills"] += 1
+            self.stats["prefill_tokens"] += int(lengths.sum())
             self._post_admit(sub, sids, tok0, completed)
 
     def _start_job(self, group, slot_ids) -> None:
@@ -648,6 +945,7 @@ class ServeEngine:
                               jnp.float32),
         }
         self.stats["prefills"] += 1
+        self.stats["prefill_tokens"] += int(lengths.sum())
 
     def _job_step(self, completed) -> None:
         """Advance the in-flight chunked prefill by one chunk; finalize
@@ -674,24 +972,31 @@ class ServeEngine:
     def _admission(self, completed) -> None:
         """Admit runnable groups into free slots until slots/pages/queue run
         out. At most one chunked-prefill job is in flight; while one is
-        active its slots are reserved and admission pauses."""
+        active its slots are reserved and admission pauses. With the prefix
+        cache enabled, admission is one request at a time (each row's
+        suffix ``start`` differs) through the suffix-prefill path."""
         while self._job is None:
             free = self._free_slots()
             if not free:
                 return
             key = self._group_key if self._bucketed else None
-            group = self.scheduler.next_group(len(free), now=self.clock,
-                                              key=key)
+            want = 1 if self._prefix is not None else len(free)
+            group = self.scheduler.next_group(want, now=self.clock, key=key)
             if not group:
                 return
             if not self._bucketed:
                 self._admit(group, completed)
                 continue
+            if self._prefix is not None:
+                if not self._admit_prefix(group[0], free[0], completed):
+                    return  # pool pressure even after reclaim
+                continue
             admitted = self._reserve_pages(group, free)
             if not admitted:
                 return  # pool pressure: wait for residents to free pages
             slot_ids = free[:len(admitted)]
-            bucket = self._bucket_for(max(r.prompt_len for r in admitted))
+            bucket = self._bucket_for(max(self._eff_len(r)
+                                          for r in admitted))
             if self.prefill_chunk and bucket > self.prefill_chunk:
                 self._start_job(admitted, slot_ids)
             else:
@@ -707,6 +1012,7 @@ class ServeEngine:
         jitted decode chunk (a single host sync). Returns (uid, tokens) for
         requests completed this step."""
         completed: list[tuple[int, np.ndarray]] = []
+        self._no_preempt.clear()  # last step's admits have their KV by now
         if self._job is not None:
             self._job_step(completed)
         self._admission(completed)
@@ -742,6 +1048,8 @@ class ServeEngine:
         while self.scheduler.pending or self.num_active or self._job:
             for uid, toks in self.step():
                 results[uid] = toks
+        if self._stream is not None:
+            self._stream.drain()  # surface stream-out callback errors here
         return results
 
     def generate(self, batch: dict, *, max_new_tokens: int) -> np.ndarray:

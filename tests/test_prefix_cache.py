@@ -1,0 +1,211 @@
+"""Property tests for the radix prefix cache and the refcounting page
+allocator: refcounts never go negative, evicted tree-only pages land at
+refcount 0 (back on the free list), matches are page-aligned and maximal,
+LRU capacity is enforced, and double frees raise instead of silently
+corrupting the free list.
+
+Runs under real Hypothesis when installed, else the deterministic shim.
+"""
+import numpy as np
+import pytest
+from _hypothesis_shim import given, settings, st
+
+from repro.serve.pages import PageAllocator
+from repro.serve.prefix_cache import PrefixCache
+
+PS = 4  # page size for every test
+
+
+def _longest_match(snapshot, tokens):
+    """Brute-force oracle: longest page-aligned cached prefix of tokens."""
+    best = []
+    for n in range(len(tokens) // PS, 0, -1):
+        key = tuple(int(t) for t in tokens[:n * PS])
+        if key in snapshot:
+            return [snapshot[tuple(int(t) for t in tokens[:i * PS])]
+                    for i in range(1, n + 1)]
+    return best
+
+
+def _random_ops(seed, n_ops, capacity):
+    """Drive random insert/match/evict against a live allocator; return the
+    (cache, alloc, trace) for invariant checks."""
+    rng = np.random.default_rng(seed)
+    alloc = PageAllocator(num_pages=64, num_slots=8, pages_per_slot=8)
+    cache = PrefixCache(PS, capacity, alloc.incref, alloc.decref)
+    slot_cycle = 0
+    for _ in range(n_ops):
+        op = rng.integers(0, 3)
+        # small vocab + short prompts force shared prefixes
+        tokens = rng.integers(0, 3, int(rng.integers(PS, 5 * PS)))
+        if op == 0:  # complete a request: allocate, insert prefix, free slot
+            n_pages = -(-len(tokens) // PS)
+            if not alloc.can_allocate(n_pages):
+                cache.evict(n_pages)
+                if not alloc.can_allocate(n_pages):
+                    continue
+            slot = slot_cycle % 8
+            slot_cycle += 1
+            if alloc._used[slot]:
+                continue
+            alloc.allocate(slot, n_pages)
+            nfull = len(tokens) // PS
+            cache.insert(tokens[:nfull * PS],
+                         [int(p) for p in alloc.table[slot, :nfull]])
+            alloc.free(slot)
+        elif op == 1:
+            got = cache.match(tokens)
+            want = _longest_match(cache.snapshot(), tokens)
+            assert got == want, (got, want)
+        else:
+            before = cache.snapshot()
+            evicted = cache.evict(int(rng.integers(1, 4)))
+            gone = set(before.values()) - set(cache.snapshot().values())
+            # evicted tree-only pages hit refcount 0 (nothing else held
+            # them here: every inserting slot was freed immediately)
+            for p in evicted:
+                assert alloc.refcount[p] == 0, (p, alloc.refcount[p])
+            assert set(evicted) >= gone
+        assert (alloc.refcount >= 0).all()
+        assert cache.cached_pages <= max(capacity, 0) or op != 0
+    return cache, alloc
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10**6), n_ops=st.integers(5, 40),
+       capacity=st.integers(0, 32))
+def test_radix_invariants_under_random_ops(seed, n_ops, capacity):
+    """Insert/match/evict in random order: matches equal the brute-force
+    longest page-aligned prefix, refcounts never go negative, evicted
+    tree-only pages return to refcount 0, and the LRU cap holds."""
+    cache, alloc = _random_ops(seed, n_ops, capacity)
+    assert cache.cached_pages <= capacity
+    # tree accounting is consistent: every snapshot page is live
+    for page in cache.snapshot().values():
+        assert alloc.refcount[page] >= 1
+    # full teardown drains every reference the tree holds
+    cache.evict(cache.cached_pages + 1)
+    assert cache.cached_pages == 0
+    assert (alloc.refcount == 0).all()
+    assert alloc.free_pages == alloc.num_pages
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10**6), n=st.integers(1, 6))
+def test_match_is_page_aligned_and_maximal(seed, n):
+    """Every match covers a whole number of pages and one more page never
+    matches (maximality), including after LRU eviction."""
+    rng = np.random.default_rng(seed)
+    alloc = PageAllocator(num_pages=64, num_slots=4, pages_per_slot=16)
+    cache = PrefixCache(PS, 32, alloc.incref, alloc.decref)
+    prompts = [rng.integers(0, 3, 3 * PS) for _ in range(n)]
+    for i, toks in enumerate(prompts):
+        slot = i % 4
+        if alloc._used[slot]:
+            alloc.free(slot)
+        alloc.allocate(slot, 3)
+        cache.insert(toks, [int(p) for p in alloc.table[slot, :3]])
+    query = np.concatenate([prompts[0], rng.integers(0, 3, PS // 2)])
+    got = cache.match(query)
+    snap = cache.snapshot()
+    assert got == _longest_match(snap, query)
+    if got:  # page-aligned by construction; maximal vs the oracle
+        assert tuple(int(t) for t in query[:len(got) * PS]) in snap
+
+
+def test_lru_eviction_prefers_coldest_leaf():
+    """The LRU victim is the least-recently-touched LEAF — interior nodes
+    (with cached children) survive so deeper prefixes never dangle."""
+    alloc = PageAllocator(num_pages=16, num_slots=2, pages_per_slot=8)
+    cache = PrefixCache(PS, 16, alloc.incref, alloc.decref)
+    a = np.arange(2 * PS) % 3            # chain of 2 pages
+    b = np.concatenate([a[:PS], np.full(PS, 7)])  # shares page 0, forks
+    alloc.allocate(0, 2)
+    cache.insert(a, [int(p) for p in alloc.table[0, :2]])
+    alloc.free(0)
+    alloc.allocate(1, 2)
+    cache.insert(b, [int(p) for p in alloc.table[1, :2]])
+    alloc.free(1)
+    cache.match(b)  # touch b's chain: a's leaf is now coldest
+    snap_before = cache.snapshot()
+    [evicted] = cache.evict(1)
+    assert evicted == snap_before[tuple(int(t) for t in a)]
+    assert alloc.refcount[evicted] == 0
+    # the shared first page (interior node) is still cached
+    assert tuple(int(t) for t in a[:PS]) in cache.snapshot()
+
+
+def test_aliased_page_survives_eviction_until_slot_frees():
+    """Refcount-aware eviction: evicting a node whose page a resident slot
+    still aliases decrefs but does NOT free the page — it returns to the
+    free list only when the slot releases it."""
+    alloc = PageAllocator(num_pages=8, num_slots=2, pages_per_slot=4)
+    cache = PrefixCache(PS, 8, alloc.incref, alloc.decref)
+    toks = np.arange(PS)
+    alloc.allocate(0, 1)
+    cache.insert(toks, [int(alloc.table[0, 0])])
+    alloc.free(0)
+    [page] = cache.match(toks)
+    alloc.alias(1, [page], 1)  # a resident slot aliases the cached page
+    assert alloc.refcount[page] == 2
+    [evicted] = cache.evict(1)
+    assert evicted == page and alloc.refcount[page] == 1
+    assert page not in alloc._free  # still live: the slot holds it
+    alloc.free(1)
+    assert alloc.refcount[page] == 0 and page in alloc._free
+
+
+# ---------------------------------------------------- allocator hardening
+
+
+def test_double_free_slot_raises_with_slot_id():
+    alloc = PageAllocator(num_pages=4, num_slots=2, pages_per_slot=2)
+    alloc.allocate(1, 2)
+    alloc.free(1)
+    with pytest.raises(RuntimeError, match="slot 1"):
+        alloc.free(1)
+    with pytest.raises(RuntimeError, match="slot 0"):
+        alloc.free(0)  # never allocated
+
+
+def test_decref_below_zero_raises_with_page_id():
+    alloc = PageAllocator(num_pages=4, num_slots=1, pages_per_slot=2)
+    alloc.allocate(0, 1)
+    page = int(alloc.table[0, 0])
+    alloc.decref(page)
+    with pytest.raises(RuntimeError, match=f"page {page}"):
+        alloc.decref(page)
+
+
+def test_incref_free_page_raises():
+    alloc = PageAllocator(num_pages=4, num_slots=1, pages_per_slot=2)
+    with pytest.raises(RuntimeError, match="page 3"):
+        alloc.incref(3)
+
+
+def test_shared_page_frees_only_at_refcount_zero():
+    """alias bumps refcounts; each free decrefs; the page returns to the
+    free list only when the LAST holder releases it."""
+    alloc = PageAllocator(num_pages=8, num_slots=3, pages_per_slot=4)
+    alloc.allocate(0, 2)
+    shared = [int(p) for p in alloc.table[0, :2]]
+    alloc.alias(1, shared, 1)
+    alloc.alias(2, shared, 0)
+    assert [alloc.refcount[p] for p in shared] == [3, 3]
+    assert alloc.live_pages == 3
+    alloc.free(0)
+    alloc.free(2)
+    assert [alloc.refcount[p] for p in shared] == [1, 1]
+    assert alloc.live_pages == 3  # slot 1 still holds both + its fresh page
+    alloc.free(1)
+    assert alloc.live_pages == 0 and alloc.free_pages == 8
+
+
+def test_high_water_pages_tracks_peak():
+    alloc = PageAllocator(num_pages=8, num_slots=2, pages_per_slot=4)
+    alloc.allocate(0, 3)
+    alloc.allocate(1, 2)
+    alloc.free(1)
+    s = alloc.stats()
+    assert s["high_water_pages"] == 5 == s["peak_live_pages"]
+    assert s["live_pages"] == 3

@@ -86,6 +86,35 @@ def test_push_front_restores_fcfs_position(seed, n, k):
     assert [r.uid for r in keep] + rest == [r.uid for r in reqs]
 
 
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10**6), n=st.integers(2, 20),
+       k=st.integers(1, 6), late=st.integers(1, 5))
+def test_push_front_preserves_arrival_order(seed, n, k, late):
+    """Preempt-and-requeue: a popped head group pushed back to the front
+    (preserving each Request's original ``arrival``) drains BEFORE both the
+    rest of the queue and any later-arriving submissions — a requeued long
+    request never loses its place to later arrivals."""
+    reqs = _requests(seed, n)
+    sch = FCFSScheduler()
+    for r in reqs:
+        sch.submit(r)
+    g = sch.next_group(free_slots=min(k, n))
+    assert all(r.arrival == reqs[i].arrival for i, r in enumerate(g))
+    # later arrivals land while the group is out being (p)re-admitted
+    newcomers = [Request(uid=1000 + i, tokens=np.zeros(3, np.int32),
+                         max_new_tokens=1, arrival=99.0)
+                 for i in range(late)]
+    for r in newcomers:
+        sch.submit(r)
+    sch.push_front(g)
+    drained = [r.uid for gg in _drain(sch, 8) for r in gg]
+    # requeued group first (original order), then the untouched queue,
+    # then the late arrivals — exactly the no-preemption FCFS order
+    assert drained == ([r.uid for r in g]
+                       + [r.uid for r in reqs[len(g):]]
+                       + [r.uid for r in newcomers])
+
+
 @settings(max_examples=50, deadline=None)
 @given(n=st.integers(1, 4096))
 def test_next_pow2_is_tight(n):

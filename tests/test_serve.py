@@ -349,6 +349,134 @@ def test_fn_cache_lru_eviction():
         set_fn_cache_limit(old_limit)
 
 
+# ------------------------------------- radix prefix cache + preemption
+
+
+def _shared_prefix_requests(cfg, page_size=8, seed=11, max_new=6):
+    """GSM8K-style workload: one shared few-shot prefix (3 full pages),
+    per-request question suffixes, plus an exact page-aligned duplicate of
+    the prefix (the full-prompt-match COW case). Arrivals staggered so
+    earlier completions populate the radix tree before later admissions."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(1, cfg.vocab_size, (3 * page_size,)).astype(np.int32)
+    toks = [np.concatenate([prefix,
+                            rng.integers(1, cfg.vocab_size, (s,))
+                            .astype(np.int32)])
+            for s in (5, 9, 2)]
+    toks.append(prefix.copy())  # full-prompt match -> copy-on-write
+    return lambda: [Request(uid=i, tokens=toks[i], max_new_tokens=max_new,
+                            arrival=i) for i in range(len(toks))]
+
+
+def test_prefix_cache_token_exact_and_suffix_only_prefill():
+    """Prefix-on must be token-exact vs prefix-off (paged) AND vs the dense
+    engine on a shared-prefix workload — including the full-prompt-match
+    COW case — while prefilling only the uncached suffixes."""
+    cfg = TINY
+    params = _params(cfg)
+    mk = _shared_prefix_requests(cfg)
+    kw = dict(max_len=48, num_slots=1, decode_chunk=4, min_bucket=8)
+    pkw = dict(kv_layout="paged", page_size=8, num_pages=32, **kw)
+    dense = ServeEngine(cfg, params, **kw).run(mk())
+    off_eng = ServeEngine(cfg, params, **pkw)
+    off = off_eng.run(mk())
+    on_eng = ServeEngine(cfg, params, prefix_cache=True, **pkw)
+    on = on_eng.run(mk())
+    assert set(on) == set(off) == set(dense)
+    for uid in dense:
+        np.testing.assert_array_equal(on[uid], dense[uid],
+                                      err_msg=f"request {uid} (vs dense)")
+        np.testing.assert_array_equal(on[uid], off[uid],
+                                      err_msg=f"request {uid} (vs off)")
+    # num_slots=1 -> each completion lands in the tree before the next
+    # admission: uids 1..3 all hit the 24-token cached prefix
+    assert on_eng.stats["prefix_hits"] == 3, on_eng.stats
+    assert on_eng.stats["prefix_pages_shared"] > 0
+    assert off_eng.stats["prefix_hits"] == 0
+    # suffix-only prefill: true-token accounting shows the saving (uid 3 is
+    # a full-prompt match -> 1-token COW prefill instead of 24)
+    assert on_eng.stats["prefill_tokens"] < off_eng.stats["prefill_tokens"]
+    saved = sum(3 * 8 for _ in range(2)) + (3 * 8 - 1)  # uids 1,2 + COW uid 3
+    assert (off_eng.stats["prefill_tokens"]
+            - on_eng.stats["prefill_tokens"]) == saved
+    # every slot released its pages: the only live pages left are the
+    # radix tree's cached prefixes
+    assert (on_eng.page_pool_stats()["live_pages"]
+            == on_eng._prefix.cached_pages)
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_preempt_and_requeue_token_exact(temperature):
+    """Preempted + re-admitted requests must reproduce the never-preempted
+    run token-for-token — greedy and sampled (per-slot key streams carry
+    across preemption)."""
+    cfg = TINY
+    params = _params(cfg)
+    rng = np.random.default_rng(13)
+    lens = [8, 8, 8, 8, 8]
+    news = [4, 12, 6, 12, 8]  # uneven budgets: victim = most remaining
+    toks = [rng.integers(1, cfg.vocab_size, (n,)).astype(np.int32)
+            for n in lens]
+    mk = lambda: [Request(uid=i, tokens=toks[i],  # noqa: E731
+                          max_new_tokens=news[i]) for i in range(len(lens))]
+    kw = dict(max_len=32, num_slots=4, decode_chunk=4, min_bucket=8,
+              kv_layout="paged", page_size=4, temperature=temperature,
+              rng=jax.random.PRNGKey(6))
+    ample = ServeEngine(cfg, params, num_pages=40, **kw).run(mk())
+    peng = ServeEngine(cfg, params, num_pages=6, preempt=True, **kw)
+    pre = peng.run(mk())
+    assert set(pre) == set(ample)
+    for uid in ample:
+        np.testing.assert_array_equal(pre[uid], ample[uid],
+                                      err_msg=f"request {uid}")
+    assert peng.stats["preempted"] >= 1, peng.stats
+    assert peng.page_pool_stats()["live_pages"] == 0
+
+
+def test_prefix_cache_with_preemption_token_exact():
+    """The combined path — prefix-accelerated re-admission of preempted
+    requests over an oversubscribed pool — stays token-exact vs dense."""
+    cfg = TINY
+    params = _params(cfg)
+    mk = _shared_prefix_requests(cfg, max_new=8)
+    kw = dict(max_len=48, num_slots=3, decode_chunk=4, min_bucket=8)
+    dense = ServeEngine(cfg, params, **kw).run(mk())
+    eng = ServeEngine(cfg, params, kv_layout="paged", page_size=8,
+                      num_pages=10, prefix_cache=True, preempt=True, **kw)
+    out = eng.run(mk())
+    for uid in dense:
+        np.testing.assert_array_equal(out[uid], dense[uid],
+                                      err_msg=f"request {uid}")
+    # only the radix tree's cached prefixes remain live, within the pool
+    assert (eng.page_pool_stats()["live_pages"]
+            == eng._prefix.cached_pages)
+    assert eng.page_pool_stats()["high_water_pages"] <= 10
+
+
+def test_stream_out_matches_run_and_propagates_errors():
+    """on_complete fires off the hot loop for every finished request with
+    exactly run()'s tokens; a raising callback surfaces from run() (via
+    drain) instead of being swallowed on the worker thread."""
+    cfg = TINY
+    params = _params(cfg)
+    mk = _mixed_requests(cfg, max_new=4)
+    got = {}
+    eng = ServeEngine(cfg, params, max_len=40, num_slots=3, decode_chunk=4,
+                      on_complete=lambda uid, t: got.__setitem__(uid, t))
+    res = eng.run(mk())
+    assert set(got) == set(res)
+    for uid in res:
+        np.testing.assert_array_equal(got[uid], res[uid])
+
+    def boom(uid, toks):
+        raise RuntimeError("detok failed")
+
+    beng = ServeEngine(cfg, params, max_len=40, num_slots=3, decode_chunk=4,
+                       on_complete=boom)
+    with pytest.raises(RuntimeError, match="detok failed"):
+        beng.run(mk())
+
+
 def test_insert_slots_paged_routes_through_table():
     """Rows land on their table's pages; pad slots and positions past the
     row's length are dropped; pool pages of other slots are untouched."""
