@@ -31,6 +31,20 @@ Key metrics (direction-aware, default tolerance 20%, per-metric overrides):
     the hard contract is "prefix sharing buys >= 1.3x on shared-prefix
     traffic" (the committed run measures ~1.9x, so the floor has real
     headroom), and being a ratio of two timings, CI noise largely cancels.
+  * ``prefix_group_admission_goodput`` — engine goodput with same-start
+    grouped admission (prefill_rows = num_slots: one [rows, bucket] suffix
+    prefill per admission wave) as a multiple of one-prefill-per-request
+    admission, on short-suffix shared-prefix traffic (serve table; higher
+    is better). The baseline is capped at 1.1 before comparing: the guard
+    is "grouped admission does not lose to one-per-call", not the exact
+    dispatch-overhead margin an unloaded CPU runner happened to measure.
+  * ``persistent_prefix_hit_rate`` — fraction of a warm eval sweep's
+    requests that hit the radix tree a PREVIOUS engine instance built and
+    handed over through the ``PrefixStore`` (serve table; higher is
+    better). Deterministic — every repeated prompt must hit, so the rate
+    is exactly 1.0 and the tolerance is 0%: any drop means cross-engine
+    adoption (fingerprint keying, close() handoff, or pool re-slotting)
+    regressed.
   * ``preempt_vs_backpressure_goodput`` — engine goodput with
     preempt-and-requeue vs plain backpressure on an oversubscribed page
     pool (serve table; higher is better). Under strict FCFS requeue-at-head
@@ -96,6 +110,14 @@ KEY_METRICS = (
     ("prefix_shared_goodput",
      lambda p: (p.get("serve_table") or {}).get("prefix_shared_goodput"),
      +1, 1.3, 0.0),
+    ("prefix_group_admission_goodput",
+     lambda p: (p.get("serve_table") or {})
+     .get("prefix_group_admission_goodput"),
+     +1, 1.1, None),
+    ("persistent_prefix_hit_rate",
+     lambda p: (p.get("serve_table") or {})
+     .get("persistent_prefix_hit_rate"),
+     +1, None, 0.0),
     ("preempt_vs_backpressure_goodput",
      lambda p: (p.get("serve_table") or {})
      .get("preempt_vs_backpressure_goodput"),

@@ -12,6 +12,13 @@ and differs only in its short question — once with the radix prefix cache
 off and once on. On the cached run, each admission after the first aliases
 the shared prefix's pages copy-on-write and prefills only its question, so
 the prefix-hit counters and the prefill-token saving are directly visible.
+
+A third section runs the same workload as TWO eval sweeps over two separate
+``ServeEngine`` instances sharing one ``PrefixStore``: the first engine's
+``close()`` hands its radix tree (and page pool) to the store, the second
+engine adopts it warm, and its admissions alias the cached pages from
+request one — the cross-engine reuse pattern of repeated eval sweeps over
+the same few-shot prompts.
 """
 import argparse
 import time
@@ -21,7 +28,9 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models import registry
+from repro.serve.config import ServeConfig
 from repro.serve.engine import ServeEngine
+from repro.serve.prefix_store import PrefixStore
 from repro.serve.scheduler import Request
 
 
@@ -53,15 +62,16 @@ def main():
 
     prefix = cfg.num_frontend_tokens if cfg.family == "vlm" else 0
     max_len = args.prompt_len + prefix + args.new_tokens
-    engine_kw = dict(max_len=max_len, num_slots=args.batch,
-                     decode_chunk=args.decode_chunk,
-                     kv_layout=args.kv_layout, page_size=args.page_size)
+    serve_cfg = ServeConfig(max_len=max_len, num_slots=args.batch,
+                            decode_chunk=args.decode_chunk,
+                            kv_layout=args.kv_layout,
+                            page_size=args.page_size)
 
     # warmup (compile) with the SAME max_len/shapes so the timed call is
     # pure steady state
-    ServeEngine(cfg, params, **engine_kw).generate(
+    ServeEngine(cfg, params, serve_cfg).generate(
         batch, max_new_tokens=args.new_tokens)
-    engine = ServeEngine(cfg, params, **engine_kw)
+    engine = ServeEngine(cfg, params, serve_cfg)
     t0 = time.perf_counter()
     out = engine.generate(batch, max_new_tokens=args.new_tokens)
     dt = time.perf_counter() - t0
@@ -79,6 +89,7 @@ def main():
 
     if args.kv_layout == "paged" and pool is not None:
         shared_prefix_demo(cfg, params, page_size=args.page_size)
+        two_sweep_demo(cfg, params, page_size=args.page_size)
 
 
 def shared_prefix_demo(cfg, params, *, page_size, num_requests=8,
@@ -101,7 +112,8 @@ def shared_prefix_demo(cfg, params, *, page_size, num_requests=8,
               kv_layout="paged", page_size=page_size, min_bucket=8)
 
     def run(prefix_cache):
-        eng = ServeEngine(cfg, params, prefix_cache=prefix_cache, **kw)
+        eng = ServeEngine(cfg, params,
+                          ServeConfig(prefix_cache=prefix_cache, **kw))
         t0 = time.perf_counter()
         res = eng.run([Request(uid=i, tokens=prompts[i],
                                max_new_tokens=new_tokens, arrival=i)
@@ -124,6 +136,48 @@ def shared_prefix_demo(cfg, params, *, page_size, num_requests=8,
           f"({s['prefix_hits']} hits, {s['prefix_pages_shared']} pages "
           f"aliased, pool high water "
           f"{on_eng.page_pool_stats()['high_water_pages']} pages)")
+
+
+def two_sweep_demo(cfg, params, *, page_size, num_requests=6,
+                   prefix_pages=6, question_len=7, new_tokens=8):
+    """Cross-engine prefix persistence: two eval sweeps over the SAME
+    few-shot prompts, each in its own ``ServeEngine``, sharing one
+    ``PrefixStore``. Sweep 1 prefills everything and ``close()`` hands the
+    radix tree to the store; sweep 2's engine adopts it warm, so every one
+    of its admissions is a prefix hit and only suffixes (questions + the
+    COW tail token) are prefilled."""
+    rng = np.random.default_rng(9)
+    fewshot = rng.integers(1, cfg.vocab_size,
+                           (prefix_pages * page_size,)).astype(np.int32)
+    prompts = [np.concatenate([fewshot,
+                               rng.integers(1, cfg.vocab_size,
+                                            (question_len,)).astype(np.int32)])
+               for _ in range(num_requests)]
+    store = PrefixStore()
+    scfg = ServeConfig(max_len=len(prompts[0]) + new_tokens, num_slots=2,
+                       decode_chunk=4, kv_layout="paged",
+                       page_size=page_size, min_bucket=8, prefix_cache=True,
+                       prefix_store=store)
+
+    def sweep():
+        eng = ServeEngine(cfg, params, scfg)
+        res = eng.run([Request(uid=i, tokens=prompts[i],
+                               max_new_tokens=new_tokens)
+                       for i in range(num_requests)])
+        stats = dict(eng.stats)
+        eng.close()  # hands the tree + pool to the store
+        return res, stats
+
+    res1, s1 = sweep()
+    res2, s2 = sweep()
+    assert all(np.array_equal(res1[u], res2[u]) for u in res1)
+    print(f"[two-sweep] {num_requests} prompts, two engines, one "
+          f"PrefixStore ({store.stats['adoptions']} adoption):")
+    print(f"  sweep 1 (cold tree): {s1['prefill_tokens']:5d} tokens "
+          f"prefilled, {s1['prefix_hits']} hits")
+    print(f"  sweep 2 (adopted):   {s2['prefill_tokens']:5d} tokens "
+          f"prefilled, {s2['prefix_hits']} hits "
+          f"({s2['prefix_pages_shared']} pages re-aliased across engines)")
 
 
 if __name__ == "__main__":

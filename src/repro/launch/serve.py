@@ -47,6 +47,15 @@ def main():
     ap.add_argument("--preempt", action="store_true",
                     help="preempt-and-requeue when the page pool is "
                          "exhausted (requires --kv-layout paged)")
+    ap.add_argument("--admission", choices=["fcfs", "prefix_aware"],
+                    default="fcfs",
+                    help="admission order: prefix_aware admits queued "
+                         "requests early when their cached prefix pages "
+                         "sit at the LRU eviction frontier")
+    ap.add_argument("--persist-prefix", action="store_true",
+                    help="keep the radix tree in a PrefixStore across "
+                         "engine instances (the second launcher pass then "
+                         "prefills suffix-only)")
     ap.add_argument("--fn-cache-limit", type=int, default=0,
                     help="bound the compiled-fn LRU (0 = keep default)")
     ap.add_argument("--seed", type=int, default=0)
@@ -54,8 +63,10 @@ def main():
 
     from repro.configs import get_config, get_smoke_config
     from repro.models import registry
+    from repro.serve.config import ServeConfig
     from repro.serve.engine import (ServeEngine, fn_cache_info,
                                     set_fn_cache_limit)
+    from repro.serve.prefix_store import PrefixStore
 
     if args.fn_cache_limit:
         set_fn_cache_limit(args.fn_cache_limit)
@@ -83,24 +94,31 @@ def main():
 
     prefix = cfg.num_frontend_tokens if cfg.family == "vlm" else 0
     max_len = args.prompt_len + prefix + args.new_tokens
-    engine_kw = dict(max_len=max_len, num_slots=args.batch,
-                     temperature=args.temperature, rng=rng,
-                     decode_chunk=args.decode_chunk,
-                     kv_layout=args.kv_layout, page_size=args.page_size,
-                     num_pages=args.num_pages or None,
-                     prefill_chunk=args.prefill_chunk,
-                     prefill_rows=args.prefill_rows,
-                     prefix_cache=args.prefix_cache, preempt=args.preempt)
+    store = PrefixStore() if args.persist_prefix else None
+    serve_cfg = ServeConfig(
+        max_len=max_len, num_slots=args.batch,
+        temperature=args.temperature, rng=rng,
+        decode_chunk=args.decode_chunk,
+        kv_layout=args.kv_layout, page_size=args.page_size,
+        num_pages=args.num_pages or None,
+        prefill_chunk=args.prefill_chunk,
+        prefill_rows=args.prefill_rows,
+        prefix_cache=args.prefix_cache, preempt=args.preempt,
+        admission=args.admission, prefix_store=store)
 
-    def one_pass():
-        engine = ServeEngine(cfg, params, **engine_kw)
+    def one_pass(close=False):
+        engine = ServeEngine(cfg, params, serve_cfg)
         out = engine.generate(batch, max_new_tokens=args.new_tokens)
+        if close:
+            # with --persist-prefix this hands the radix tree to the store,
+            # so the next pass's engine adopts it warm
+            engine.close()
         return out, engine
 
     # warmup: same shapes/max_len as the timed call, so every compile
     # (prefill, decode chunk, insert) lands here
     t0 = time.perf_counter()
-    one_pass()
+    one_pass(close=True)
     t_compile = time.perf_counter() - t0
     warm = fn_cache_info()
 
@@ -140,6 +158,10 @@ def main():
     if args.preempt:
         print(f"  preempted: {engine.stats['preempted']} "
               f"(backpressure {engine.stats['backpressure']})")
+    if store is not None:
+        print(f"  prefix store: {store.stats['adoptions']} adoptions, "
+              f"cross-engine hits {engine.stats['prefix_hits']}, "
+              f"suffix-only prefill {engine.stats['prefill_tokens']} tokens")
     print("first row:", out[0][:24])
     return 0
 

@@ -1,13 +1,24 @@
 """Serving subsystem: continuous-batching engine + paged KV pool + scheduler
-+ radix prefix cache + background stream-out."""
++ radix prefix cache + admission policies + cross-engine prefix persistence
++ background stream-out.
+
+The surface is ``ServeEngine(cfg, params, ServeConfig(...))``; results come
+back as ``Completion`` records. The pre-engine static-batch loop
+(``generate_legacy``) is a test/parity module now — import it from
+``repro.serve._oracle`` if you need the oracle."""
+from repro.serve.config import ServeConfig
 from repro.serve.engine import (ServeEngine, clear_fn_cache, fn_cache_info,
-                                generate, generate_legacy, set_fn_cache_limit)
+                                generate, set_fn_cache_limit)
 from repro.serve.pages import PageAllocator, PoolExhausted, pages_for
 from repro.serve.prefix_cache import PrefixCache
-from repro.serve.scheduler import FCFSScheduler, Request
+from repro.serve.prefix_store import PrefixStore
+from repro.serve.results import Completion, RunResult
+from repro.serve.scheduler import (AdmissionPolicy, FCFSScheduler,
+                                   PrefixAwareAdmission, Request)
 from repro.serve.streamout import StreamOut
 
-__all__ = ["ServeEngine", "FCFSScheduler", "Request", "generate",
-           "generate_legacy", "fn_cache_info", "set_fn_cache_limit",
+__all__ = ["ServeEngine", "ServeConfig", "Completion", "RunResult",
+           "FCFSScheduler", "AdmissionPolicy", "PrefixAwareAdmission",
+           "Request", "generate", "fn_cache_info", "set_fn_cache_limit",
            "clear_fn_cache", "PageAllocator", "PoolExhausted", "pages_for",
-           "PrefixCache", "StreamOut"]
+           "PrefixCache", "PrefixStore", "StreamOut"]

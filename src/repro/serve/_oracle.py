@@ -1,0 +1,55 @@
+"""Parity oracle: the pre-engine static-batch decode loop.
+
+``generate_legacy`` is no longer part of the public serving surface — use
+``ServeEngine`` (or the module-level ``repro.serve.generate`` wrapper) for
+real decoding. It stays importable here because it defines two contracts
+the engine is tested against:
+
+- **token parity**: the engine's continuous-batching output must match
+  this loop token-for-token under greedy decoding (the paper's eval
+  protocol), so the tests diff against it;
+- **the historical rng stream**: sampled decoding draws one batch-wide
+  categorical per step from a split-per-step key; ``generate``'s sampled
+  path routes here so seeds from older runs keep reproducing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serve.engine import _prompt_prefix, make_decode_fn, make_prefill_fn
+
+
+def generate_legacy(params, cfg: ModelConfig, batch: dict, *,
+                    max_new_tokens: int, max_len: int | None = None,
+                    temperature: float = 0.0, rng: jax.Array | None = None,
+                    mesh=None, batch_axes=("data",), eos_id: int | None = None):
+    """The pre-engine static-batch loop: batched prefill + one decode_step
+    (and one host sync) per token, full max_new_tokens always decoded, EOS
+    masked post-hoc. Kept as the engine's parity oracle and as the sampled-
+    decoding path; its prefill/decode closures come from the process-wide
+    cache instead of recompiling per call."""
+    b, s = batch["tokens"].shape
+    max_len = max_len or (s + _prompt_prefix(cfg, batch) + max_new_tokens)
+    prefill_fn = make_prefill_fn(cfg, max_len, mesh=mesh, batch_axes=batch_axes)
+    decode_fn = make_decode_fn(cfg, mesh=mesh, batch_axes=batch_axes)
+    logits, cache = prefill_fn(params, batch)
+    out = []
+    tok = None
+    for _ in range(max_new_tokens):
+        if temperature > 0:
+            rng, k = jax.random.split(rng)
+            tok = jax.random.categorical(k, logits.astype(jnp.float32) / temperature)
+        else:
+            tok = jnp.argmax(logits, axis=-1)
+        out.append(np.asarray(tok))
+        logits, cache = decode_fn(params, tok[:, None].astype(jnp.int32), cache)
+    gen = np.stack(out, axis=1)
+    if eos_id is not None:
+        # zero out everything after the first EOS per row
+        ended = np.cumsum(gen == eos_id, axis=1) > 0
+        ended = np.concatenate([np.zeros((b, 1), bool), ended[:, :-1]], axis=1)
+        gen = np.where(ended, 0, gen)
+    return gen

@@ -58,14 +58,27 @@ Families without a length-indexed KV cache (ssm/hybrid/vlm/encdec, and
 EP-MoE whose routing sees pad rows) keep the legacy exact-length
 signature-grouped admission path.
 
+Serving policy is carried by one validated ``ServeConfig``
+(serve/config.py): ``ServeEngine(cfg, params, ServeConfig(...))`` is the
+surface; the historical ``ServeEngine(cfg, params, **kwargs)`` spelling
+still works for one release behind a ``DeprecationWarning``. Every
+delivery path (``step``/``run``/``generate``/``on_complete``) hands back
+``Completion`` records (serve/results.py). Admission order is pluggable
+through ``scheduler.AdmissionPolicy`` — ``admission="prefix_aware"``
+schedules around the radix tree's LRU eviction frontier — and a
+server-level ``PrefixStore`` (serve/prefix_store.py) carries the radix
+tree + page pool across engine instances (``close()`` hands them over; the
+next engine over the same params adopts them warm).
+
 Used by the examples, the synthetic-math evaluator (the GSM8K-protocol
 proxy: zero-shot greedy decoding, temperature 0), the serve launcher, and
-``benchmarks/bench_serve.py``. The pre-engine static-batch loop is kept as
-``generate_legacy`` (the parity oracle); ``generate`` keeps its original
+``benchmarks/bench_serve.py``. The pre-engine static-batch loop lives in
+``serve/_oracle.py`` (the parity oracle); ``generate`` keeps its original
 signature and reproduces the legacy outputs exactly.
 """
 from __future__ import annotations
 
+import warnings
 from collections import OrderedDict
 
 import numpy as np
@@ -75,9 +88,12 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import registry
+from repro.serve.config import ServeConfig
 from repro.serve.pages import PageAllocator, PoolExhausted, pages_for
 from repro.serve.prefix_cache import PrefixCache
-from repro.serve.scheduler import FCFSScheduler, Request
+from repro.serve.results import Completion, RunResult, TokenBatch
+from repro.serve.scheduler import (FCFSScheduler, PrefixAwareAdmission,
+                                   Request)
 from repro.serve.streamout import StreamOut
 
 # ------------------------------------------------------ compiled-fn caching
@@ -232,50 +248,52 @@ class ServeEngine:
     the legacy exact-length admission path.
     """
 
-    def __init__(self, cfg: ModelConfig, params, *, max_len: int,
-                 num_slots: int, eos_id: int | None = None, pad_id: int = 0,
-                 decode_chunk: int = 8, temperature: float = 0.0,
-                 rng: jax.Array | None = None, mesh=None,
-                 batch_axes=("data",), kv_layout: str = "dense",
-                 page_size: int = 16, num_pages: int | None = None,
-                 prefill_chunk: int = 0, min_bucket: int = 16,
-                 prefill_rows: int = 1, prefix_cache: bool = False,
-                 prefix_cache_pages: int | None = None,
-                 preempt: bool = False, on_complete=None,
-                 stream_out: bool = True):
-        if num_slots < 1:
-            raise ValueError("num_slots must be >= 1")
-        if prefill_rows < 1:
-            raise ValueError("prefill_rows must be >= 1")
-        if kv_layout not in ("dense", "paged"):
-            raise ValueError(f"kv_layout must be 'dense' or 'paged', "
-                             f"got {kv_layout!r}")
+    def __init__(self, cfg: ModelConfig, params,
+                 serve_cfg: ServeConfig | None = None, **kwargs):
+        if serve_cfg is None:
+            # one-release deprecation shim: the historical ~18-kwarg surface
+            # funnels into ServeConfig (same validation, one warning); the
+            # legacy on_complete contract was (uid, tokens), so wrap it
+            warnings.warn(
+                "ServeEngine(cfg, params, **kwargs) is deprecated; pass a "
+                "ServeConfig: ServeEngine(cfg, params, ServeConfig(...)). "
+                "The loose-kwargs surface will be removed next release.",
+                DeprecationWarning, stacklevel=2)
+            cb = kwargs.pop("on_complete", None)
+            if cb is not None:
+                kwargs["on_complete"] = lambda c: cb(c.uid, c.tokens)
+            serve_cfg = ServeConfig(**kwargs)
+        elif kwargs:
+            raise TypeError(
+                f"ServeEngine got both a ServeConfig and loose kwargs "
+                f"{sorted(kwargs)}; fold everything into the ServeConfig")
+        scfg = serve_cfg
+        self.serve_cfg = scfg
         self.cfg, self.params = cfg, params
         self.model = registry.get(cfg)
-        self.max_len, self.num_slots = int(max_len), int(num_slots)
-        self.eos_id = None if eos_id is None else int(eos_id)
-        self.pad_id = int(pad_id)
-        self.decode_chunk = int(decode_chunk)
-        self.temperature = float(temperature)
-        self.mesh, self.batch_axes = mesh, tuple(batch_axes)
-        self.scheduler = FCFSScheduler()
+        self.max_len, self.num_slots = scfg.max_len, scfg.num_slots
+        self.eos_id = scfg.eos_id
+        self.pad_id = int(scfg.pad_id)
+        self.decode_chunk = int(scfg.decode_chunk)
+        self.temperature = float(scfg.temperature)
+        self.mesh, self.batch_axes = scfg.mesh, scfg.batch_axes
 
         # bucketed prefill needs per-row logit gather over a padded batch
         # (lm.prefill lengths=); only length-indexed-KV families support it,
         # and EP-MoE must never see pad rows (routing is batch-coupled)
         self._bucketed = (cfg.family in ("dense", "moe")
                           and cfg.moe_impl != "ep")
-        self.prefill_buckets = (_make_buckets(self.max_len, min_bucket)
+        self.prefill_buckets = (_make_buckets(self.max_len, scfg.min_bucket)
                                 if self._bucketed else ())
         # bucketed admission prefills fixed [prefill_rows, bucket] batches
         # (larger groups split across calls): one compile key per bucket,
         # and small/stale groups don't pay num_slots rows of pad FLOPs
-        self.prefill_rows = min(int(prefill_rows), self.num_slots)
+        self.prefill_rows = min(int(scfg.prefill_rows), self.num_slots)
 
-        self.kv_layout = kv_layout
-        self.page_size = int(page_size)
+        self.kv_layout = scfg.kv_layout
+        self.page_size = int(scfg.page_size)
         self._alloc: PageAllocator | None = None
-        if kv_layout == "paged":
+        if scfg.kv_layout == "paged":
             if cfg.family == "ssm":
                 # no length-indexed KV to page — identical to dense layout
                 self.cache = self.model.init_cache(cfg, self.num_slots,
@@ -288,7 +306,8 @@ class ServeEngine:
                         "and stays on the dense cache path. Use "
                         "kv_layout='dense' for ep configs.")
                 pps = pages_for(self.max_len, self.page_size)
-                self.num_pages = (int(num_pages) if num_pages is not None
+                self.num_pages = (int(scfg.num_pages)
+                                  if scfg.num_pages is not None
                                   else self.num_slots * pps)
                 # raises with the supported-family matrix if cfg can't page
                 self.cache = self.model.init_paged_cache(
@@ -300,14 +319,16 @@ class ServeEngine:
             self.cache = self.model.init_cache(cfg, self.num_slots,
                                                self.max_len)
 
-        self.preempt = bool(preempt)
+        self.preempt = bool(scfg.preempt)
         if self.preempt and self._alloc is None:
             raise ValueError(
                 "preempt=True requires kv_layout='paged' with a page pool "
-                "(preemption frees and re-acquires pages; the dense layout "
-                "has nothing to reclaim)")
+                "(preemption frees and re-acquires pages; this config has "
+                "no pool to reclaim — ssm pages are a no-op)")
         self._prefix: PrefixCache | None = None
-        if prefix_cache:
+        self._store = scfg.prefix_store
+        self._store_key = None
+        if scfg.prefix_cache:
             if self._alloc is None or not self._bucketed or cfg.use_mla:
                 raise ValueError(
                     f"prefix_cache=True requires kv_layout='paged' on a "
@@ -315,17 +336,53 @@ class ServeEngine:
                     f"{cfg.family!r}, use_mla={cfg.use_mla}, moe_impl="
                     f"{cfg.moe_impl!r}): suffix prefill reuses the chunked-"
                     f"prefill machinery and page aliasing needs the pool")
-            cap = (int(prefix_cache_pages) if prefix_cache_pages is not None
+            cap = (int(scfg.prefix_cache_pages)
+                   if scfg.prefix_cache_pages is not None
                    else self.num_pages // 2)
             self._prefix = PrefixCache(self.page_size, cap,
                                        self._alloc.incref, self._alloc.decref)
+            if self._store is not None:
+                # adopt warm state from a previous engine over the same
+                # params + pool geometry: the stored k/v pools replace the
+                # freshly-initialized ones, the stored allocator (carrying
+                # the tree's page references) is re-shaped to this engine's
+                # slot geometry, and the stored tree replaces the cold one
+                self._store_key = self._store.key_for(
+                    cfg, params, page_size=self.page_size,
+                    num_pages=self.num_pages)
+                state = self._store.take(self._store_key)
+                if state is not None:
+                    self.cache = {**self.cache, "k": state["k"],
+                                  "v": state["v"]}
+                    self._alloc = state["alloc"].resize_slots(self.num_slots,
+                                                              pps)
+                    tree = state["tree"]
+                    # the tree's incref/decref are bound to the adopted
+                    # allocator — the same object we just resized
+                    tree.capacity = cap
+                    if len(tree) > cap:
+                        tree.evict(len(tree) - cap)
+                    self._prefix = tree
+                    self._mirror_pages()
 
-        self._on_complete = on_complete
+        self.admission_policy = None
+        if scfg.admission == "prefix_aware":
+            fp = (int(scfg.admission_frontier_pages)
+                  if scfg.admission_frontier_pages is not None
+                  else 2 * pages_for(self.max_len, self.page_size))
+            self.admission_policy = PrefixAwareAdmission(
+                lambda r: set(self._prefix.match(self._eff_tokens(r),
+                                                 touch=False)),
+                lambda: self._prefix.lru_pages(fp),
+                max_skips=scfg.admission_max_skips)
+        self.scheduler = FCFSScheduler(self.admission_policy)
+
+        self._on_complete = scfg.on_complete
         self._stream: StreamOut | None = (
-            StreamOut(on_complete)
-            if on_complete is not None and stream_out else None)
+            StreamOut(scfg.on_complete)
+            if scfg.on_complete is not None and scfg.stream_out else None)
 
-        self.prefill_chunk = int(prefill_chunk)
+        self.prefill_chunk = int(scfg.prefill_chunk)
         if self.prefill_chunk:
             if not self._bucketed or cfg.use_mla:
                 raise ValueError(
@@ -333,14 +390,10 @@ class ServeEngine:
                     f"dense/moe serving (family={cfg.family!r}, "
                     f"use_mla={cfg.use_mla}, moe_impl={cfg.moe_impl!r}); "
                     f"use prefill_chunk=0 for this architecture")
-            if self.prefill_chunk & (self.prefill_chunk - 1):
-                raise ValueError(f"prefill_chunk must be a power of two "
-                                 f"(got {self.prefill_chunk}) so chunk "
-                                 f"shapes tile the pow2 buckets")
 
         self.finished = jnp.ones((self.num_slots,), bool)  # idle slots are inert
         self.last_tok = jnp.full((self.num_slots,), self.pad_id, jnp.int32)
-        base = rng if rng is not None else jax.random.PRNGKey(0)
+        base = scfg.rng if scfg.rng is not None else jax.random.PRNGKey(0)
         self._base_rng = base
         self.keys = jax.random.split(base, self.num_slots)
 
@@ -348,8 +401,10 @@ class ServeEngine:
         self._out: dict[int, list[int]] = {}      # uid -> emitted tokens
         self._left: dict[int, int] = {}           # uid -> remaining budget
         self._resume: dict[int, dict] = {}        # uid -> preempted state
+        self._meta: dict[int, dict] = {}          # uid -> Completion fields
         self._no_preempt: set[int] = set()        # slots admitted this step
         self._job: dict | None = None             # in-flight chunked prefill
+        self._closed = False
         self.clock = 0                            # admission step counter
         self.stats = {"decode_chunks": 0, "decode_steps": 0, "prefills": 0,
                       "prefill_chunks": 0, "admitted": 0, "completed": 0,
@@ -470,16 +525,19 @@ class ServeEngine:
 
         return _cached_fn(key, build)
 
-    def _admit_prefix_fn(self, scratch_len: int, chunk: int):
-        """Prefix-cache admission (single row): COW-copy the boundary page
-        (``cow_dst == num_pages`` drops the copy), gather the aliased prefix
-        [0, start) from the page pools into a dense scratch, prefill only
-        the uncached suffix chunk (traced ``start`` — one compile per
-        (scratch_len, chunk) SHAPE, both pow2, not per offset), scatter
-        positions [start, length) back through the slot's table (shared
-        pages below ``start`` are never written), and sample token 0. A
+    def _admit_prefix_fn(self, scratch_len: int, chunk: int, rows: int):
+        """Prefix-cache admission for a same-start group of ``rows``
+        requests in ONE call: per row, COW-copy the boundary page
+        (``cow_dst == num_pages`` drops the copy), gather the aliased
+        prefix [0, start) from the page pools into a dense scratch, prefill
+        only the uncached suffix chunk (traced ``start``, shared by the
+        whole group — one compile per (scratch_len, chunk, rows) SHAPE, all
+        static, not per offset), scatter positions [start, length) back
+        through each slot's table (shared pages below ``start`` are never
+        written), and sample token 0. Pad rows carry slot=num_slots and
+        cow indices=num_pages, so every one of their scatters drops. A
         prefix MISS is the same closure with start=0 over a zero scratch."""
-        key = ("padmit", scratch_len, chunk) + self._static_key()
+        key = ("padmit", scratch_len, chunk, rows) + self._static_key()
         model, cfg = self.model, self.cfg
         mesh, axes, eos = self.mesh, self.batch_axes, self.eos_id
         temperature = self.temperature
@@ -572,6 +630,8 @@ class ServeEngine:
     # ----------------------------------------------------------- lifecycle
 
     def submit(self, req: Request) -> None:
+        if self._closed:
+            raise RuntimeError("ServeEngine is closed")
         if req.prompt_len == 0:
             raise ValueError(
                 f"request {req.uid}: empty prompt — the engine needs at "
@@ -661,8 +721,18 @@ class ServeEngine:
         self._slot_req[slot] = None
         self.stats["completed"] += 1
         toks = np.asarray(self._out.pop(req.uid), np.int32)
-        completed.append((req.uid, toks))
         self._left.pop(req.uid, None)
+        meta = self._meta.pop(req.uid, {})
+        eos_hit = (self.eos_id is not None and toks.size
+                   and int(toks[-1]) == self.eos_id)
+        comp = Completion(
+            uid=req.uid, tokens=toks,
+            finish_reason="eos" if eos_hit else "length",
+            arrival=float(req.arrival),
+            first_token_step=int(meta.get("first_step", self.clock)),
+            done_step=int(self.clock),
+            prefix_pages=int(meta.get("prefix_pages", 0)))
+        completed.append(comp)
         if self._alloc is not None:
             if self._prefix is not None:
                 self._insert_prefix_pages(slot, req.tokens, req.prompt_len)
@@ -670,9 +740,9 @@ class ServeEngine:
             self._mirror_pages()
         if self._on_complete is not None:
             if self._stream is not None:
-                self._stream.put(req.uid, toks)   # worker detokenizes
+                self._stream.put(comp)     # worker detokenizes
             else:
-                self._on_complete(req.uid, toks)  # stream_out=False: inline
+                self._on_complete(comp)    # stream_out=False: inline
 
     # ----------------------------------------------------------- admission
 
@@ -682,6 +752,10 @@ class ServeEngine:
         for req, slot, t in zip(group, slot_ids, tok0):
             self._slot_req[slot] = req
             self._no_preempt.add(slot)  # just admitted: no KV written yet
+            # first admission stamps first_token_step; a preempted request
+            # keeps its original (its first token really was sampled then)
+            self._meta.setdefault(req.uid, {"first_step": self.clock,
+                                            "prefix_pages": 0})
             res = self._resume.pop(req.uid, None)
             if res is not None:
                 self._out[req.uid] = res["emitted"] + [int(t)]
@@ -851,66 +925,119 @@ class ServeEngine:
 
     # ------------------------------------------------ prefix-hit admission
 
-    def _admit_prefix(self, req: Request, slot: int, completed) -> bool:
-        """Admit one request through the radix prefix cache: alias the
-        longest cached prefix into the slot's table and prefill only the
-        uncached suffix. Returns False on backpressure (the request is back
-        at the queue head). COW boundary: a match is page-granular, so the
-        suffix start is page-aligned UNLESS the entire prompt is cached —
-        then the final token's logits must be recomputed (start = len-1,
-        mid-page) and the last matched page is duplicated first so the
-        shared copy is never written."""
-        ps = self.page_size
+    def _prefix_match_start(self, req: Request, touch: bool = True):
+        """The request's radix match and its page-aligned suffix start.
+        COW boundary: a match is page-granular, so the start is
+        page-aligned UNLESS the entire prompt is cached — then the final
+        token's logits must be recomputed (start = len-1, mid-page) and
+        the last matched page is duplicated first so the shared copy is
+        never written."""
         eff = self._eff_tokens(req)
         length = len(eff)
-        matched = self._prefix.match(eff)
-        if matched and len(matched) * ps >= length:
-            aliased, cow_src = matched[:-1], int(matched[-1])
-            start = length - 1
-        else:
-            aliased, cow_src = matched, None
-            start = len(matched) * ps
-        need = pages_for(length + self._budget_left(req), ps)
-        n_fresh = need - len(aliased)
-        # pin the matched pages before reclaim can evict them out from
-        # under us (eviction of a tree-only page would free it for reuse)
-        for p in matched:
-            self._alloc.incref(p)
-        try:
-            while not self._alloc.can_allocate(n_fresh):
-                if not self._reclaim(n_fresh, self._budget_left(req)):
-                    break
-            if not self._alloc.can_allocate(n_fresh):
-                self.scheduler.push_front([req])
-                self.stats["backpressure"] += 1
-                return False
-            self._alloc.alias(slot, aliased, n_fresh)
-        finally:
-            for p in matched:
-                self._alloc.decref(p)
-        self._mirror_pages()
-        cow_dst = (int(self._alloc.table[slot, len(aliased)])
-                   if cow_src is not None else self.num_pages)
+        matched = self._prefix.match(eff, touch=touch)
+        if matched and len(matched) * self.page_size >= length:
+            return eff, length, matched, matched[:-1], int(matched[-1]), \
+                length - 1
+        return eff, length, matched, matched, None, \
+            len(matched) * self.page_size
 
-        suffix = length - start
-        chunk = _next_pow2(suffix)
-        scratch_len = _next_pow2(max(length, start + chunk))
-        tokens = np.full((1, chunk), self.pad_id, np.int32)
-        tokens[0, :suffix] = eff[start:]
-        fn = self._admit_prefix_fn(scratch_len, chunk)
+    def _prefix_group_key(self, req: Request) -> tuple:
+        """Admission group key for the prefix path: requests sharing a
+        suffix ``start`` and a prompt-length bucket prefill as ONE
+        [rows, chunk] call. A pure probe — grouping must not touch the LRU
+        stamps the prefix-aware policy schedules around."""
+        *_, start = self._prefix_match_start(req, touch=False)
+        ex = tuple(sorted((k, np.asarray(v).shape)
+                          for k, v in req.extras.items()))
+        return (start, self._bucket_for(self._eff_len(req)), ex)
+
+    def _admit_prefix_group(self, group, free, completed) -> bool:
+        """Admit a same-start group through the radix prefix cache in one
+        prefill call: alias each request's cached prefix into its slot's
+        table and prefill only the uncached suffixes as a [rows, chunk]
+        batch (``rows`` = prefill_rows, pad rows drop on device). The
+        matches are re-taken (touched) here; nothing mutates the tree
+        between the scheduler's group-key probe and this point, so the
+        group's shared ``start`` still holds. Returns False if any member
+        hit backpressure (it and everything behind it are back at the
+        queue head — the caller stops admitting)."""
+        ps = self.page_size
+        infos = [self._prefix_match_start(r) for r in group]
+        start = infos[0][-1]
+        # pin every match before reclaim can evict it out from under us
+        # (eviction of a tree-only page would free it for reuse); pinned
+        # pages survive prefix eviction with their KV intact, so aliasing
+        # them below stays valid even if reclaim drops them from the tree
+        pinned = [p for (_, _, matched, *_) in infos for p in matched]
+        for p in pinned:
+            self._alloc.incref(p)
+        admitted, slots = [], []
+        try:
+            for (eff, length, matched, aliased, cow_src, st), req, slot in \
+                    zip(infos, group, free):
+                assert st == start, "scheduler grouped mixed starts"
+                budget = self._budget_left(req)
+                need = pages_for(length + budget, ps)
+                n_fresh = need - len(aliased)
+                while not self._alloc.can_allocate(n_fresh):
+                    if not self._reclaim(n_fresh, budget):
+                        break
+                if not self._alloc.can_allocate(n_fresh):
+                    back = group[len(admitted):]
+                    self.scheduler.push_front(back)
+                    self.stats["backpressure"] += len(back)
+                    break
+                self._alloc.alias(slot, aliased, n_fresh)
+                admitted.append((req, eff, length, matched, aliased,
+                                 cow_src))
+                slots.append(slot)
+        finally:
+            for p in pinned:
+                self._alloc.decref(p)
+        if not admitted:
+            return False
+        self._mirror_pages()
+
+        rows = self.prefill_rows
+        chunk = _next_pow2(max(length - start
+                               for _, _, length, *_ in admitted))
+        scratch_len = _next_pow2(max(max(length for _, _, length, *_
+                                         in admitted), start + chunk))
+        tokens = np.full((rows, chunk), self.pad_id, np.int32)
+        lengths = np.zeros((rows,), np.int32)
+        slot_arr = np.full((rows,), self.num_slots, np.int32)
+        cow_src_arr = np.full((rows,), self.num_pages, np.int32)
+        cow_dst_arr = np.full((rows,), self.num_pages, np.int32)
+        suffix_total = 0
+        for i, ((req, eff, length, matched, aliased, cow_src),
+                slot) in enumerate(zip(admitted, slots)):
+            suffix = length - start
+            tokens[i, :suffix] = eff[start:]
+            lengths[i] = length
+            slot_arr[i] = slot
+            suffix_total += suffix
+            if cow_src is not None:
+                cow_src_arr[i] = cow_src
+                cow_dst_arr[i] = int(self._alloc.table[slot, len(aliased)])
+            if matched:
+                self.stats["prefix_hits"] += 1
+                self.stats["prefix_pages_shared"] += len(aliased)
+                meta = self._meta.setdefault(
+                    req.uid, {"first_step": self.clock, "prefix_pages": 0})
+                meta["prefix_pages"] += len(aliased)
+
+        reqs = [a[0] for a in admitted]
+        fn = self._admit_prefix_fn(scratch_len, chunk, rows)
         self.cache, self.last_tok, self.finished, self.keys, tok0 = fn(
-            self.params, self.cache, tokens, np.asarray([slot], np.int32),
-            np.int32(start), np.asarray([length], np.int32),
-            np.int32(cow_src if cow_src is not None else self.num_pages),
-            np.int32(cow_dst), self.last_tok, self.finished, self.keys,
-            self._req_keys([req], 1))
+            self.params, self.cache, tokens, slot_arr, np.int32(start),
+            lengths, cow_src_arr, cow_dst_arr, self.last_tok, self.finished,
+            self.keys, self._req_keys(reqs, rows))
+        # suffix-only accounting: the aliased prefixes cost zero prefill
+        # tokens, and the whole group is ONE prefill call
         self.stats["prefills"] += 1
-        self.stats["prefill_tokens"] += suffix
-        if matched:
-            self.stats["prefix_hits"] += 1
-            self.stats["prefix_pages_shared"] += len(aliased)
-        self._post_admit([req], [slot], tok0, completed)
-        return True
+        self.stats["prefill_tokens"] += suffix_total
+        self._post_admit(reqs, slots, tok0, completed)
+        return len(admitted) == len(group)
 
     def _admit_bucketed(self, group, slot_ids, completed) -> None:
         """Prefill the group in fixed [prefill_rows, bucket] batches: the
@@ -973,14 +1100,19 @@ class ServeEngine:
         """Admit runnable groups into free slots until slots/pages/queue run
         out. At most one chunked-prefill job is in flight; while one is
         active its slots are reserved and admission pauses. With the prefix
-        cache enabled, admission is one request at a time (each row's
-        suffix ``start`` differs) through the suffix-prefill path."""
+        cache enabled, groups are keyed by (suffix start, bucket) so a
+        same-start group prefills as ONE [prefill_rows, chunk] call through
+        the suffix-prefill path."""
         while self._job is None:
             free = self._free_slots()
             if not free:
                 return
-            key = self._group_key if self._bucketed else None
-            want = 1 if self._prefix is not None else len(free)
+            if self._prefix is not None:
+                key = self._prefix_group_key
+                want = min(len(free), self.prefill_rows)
+            else:
+                key = self._group_key if self._bucketed else None
+                want = len(free)
             group = self.scheduler.next_group(want, now=self.clock, key=key)
             if not group:
                 return
@@ -988,7 +1120,7 @@ class ServeEngine:
                 self._admit(group, completed)
                 continue
             if self._prefix is not None:
-                if not self._admit_prefix(group[0], free[0], completed):
+                if not self._admit_prefix_group(group, free, completed):
                     return  # pool pressure even after reclaim
                 continue
             admitted = self._reserve_pages(group, free)
@@ -1006,12 +1138,14 @@ class ServeEngine:
 
     # ---------------------------------------------------------------- step
 
-    def step(self) -> list[tuple[int, np.ndarray]]:
+    def step(self) -> list[Completion]:
         """One engine step: advance the chunked-prefill job (if any) by one
         chunk, admit every runnable group into free slots, then run one
-        jitted decode chunk (a single host sync). Returns (uid, tokens) for
-        requests completed this step."""
-        completed: list[tuple[int, np.ndarray]] = []
+        jitted decode chunk (a single host sync). Returns a ``Completion``
+        per request finished this step."""
+        if self._closed:
+            raise RuntimeError("ServeEngine is closed")
+        completed: list[Completion] = []
         self._no_preempt.clear()  # last step's admits have their KV by now
         if self._job is not None:
             self._job_step(completed)
@@ -1039,23 +1173,27 @@ class ServeEngine:
         self.clock += 1
         return completed
 
-    def run(self, requests=()) -> dict[int, np.ndarray]:
+    def run(self, requests=()) -> RunResult:
         """Submit ``requests`` and drive steps until queue and slots drain.
-        Returns {uid: generated tokens (ends at EOS if hit)}."""
+        Returns a ``RunResult``: a {uid: generated tokens (ends at EOS if
+        hit)} mapping whose ``.completions`` carries the full per-request
+        ``Completion`` records."""
         for r in requests:
             self.submit(r)
-        results: dict[int, np.ndarray] = {}
+        comps: dict[int, Completion] = {}
         while self.scheduler.pending or self.num_active or self._job:
-            for uid, toks in self.step():
-                results[uid] = toks
+            for c in self.step():
+                comps[c.uid] = c
         if self._stream is not None:
             self._stream.drain()  # surface stream-out callback errors here
-        return results
+        return RunResult(comps)
 
     def generate(self, batch: dict, *, max_new_tokens: int) -> np.ndarray:
         """Static-batch convenience: decode ``batch`` (all prompts the same
         length, batch size <= num_slots) and return [B, max_new_tokens] with
-        ``pad_id`` after EOS — the legacy ``generate`` output contract."""
+        ``pad_id`` after EOS — the legacy ``generate`` output contract. The
+        returned array's ``.completions`` holds the ``Completion`` records
+        (uid == row index)."""
         b = batch["tokens"].shape[0]
         if b > self.num_slots:
             raise ValueError(f"batch {b} > num_slots {self.num_slots}")
@@ -1069,7 +1207,32 @@ class ServeEngine:
         for i in range(b):
             toks = res[i][:max_new_tokens]
             out[i, :len(toks)] = toks
-        return out
+        return TokenBatch.wrap(out, res.completions)
+
+    def close(self) -> None:
+        """Tear down the engine. Idempotent; the engine must be drained
+        (no residents, no queue, no in-flight prefill job). With a
+        ``PrefixStore`` configured, the radix tree, its page references,
+        and the k/v page pools are handed to the store under the existing
+        refcount contract — every slot is free at this point, so the
+        tree's one-ref-per-node references are exactly the pool's live
+        pages — and the next engine over the same params + geometry adopts
+        them warm. ``step``/``submit`` raise afterwards."""
+        if self._closed:
+            return
+        if self.num_active or self.scheduler.pending or self._job:
+            raise RuntimeError(
+                f"close() on a busy engine: {self.num_active} residents, "
+                f"{self.scheduler.pending} queued, job={'yes' if self._job else 'no'} "
+                f"— drain with run()/step() first")
+        if self._stream is not None:
+            self._stream.close()
+            self._stream = None
+        if self._store is not None and self._prefix is not None:
+            self._store.put(self._store_key, self.params, {
+                "k": self.cache["k"], "v": self.cache["v"],
+                "alloc": self._alloc, "tree": self._prefix})
+        self._closed = True
 
 
 # ------------------------------------------------------------- public API
@@ -1084,51 +1247,18 @@ def generate(params, cfg: ModelConfig, batch: dict, *, max_new_tokens: int,
     batch["tokens"]: [B, S_prompt]. Returns np.ndarray [B, max_new_tokens].
 
     Compat wrapper over ``ServeEngine`` — token-for-token identical to the
-    pre-engine loop (``generate_legacy``). Sampled decoding keeps the legacy
-    path so the historical rng stream (one batch-wide categorical per step)
-    is preserved exactly."""
+    pre-engine loop (``serve/_oracle.py``'s ``generate_legacy``). Sampled
+    decoding keeps the legacy path so the historical rng stream (one
+    batch-wide categorical per step) is preserved exactly."""
     if temperature > 0:
+        from repro.serve._oracle import generate_legacy  # lazy: avoids cycle
         return generate_legacy(params, cfg, batch,
                                max_new_tokens=max_new_tokens, max_len=max_len,
                                temperature=temperature, rng=rng, mesh=mesh,
                                batch_axes=batch_axes, eos_id=eos_id)
     b, s = batch["tokens"].shape
     max_len = max_len or (s + _prompt_prefix(cfg, batch) + max_new_tokens)
-    engine = ServeEngine(cfg, params, max_len=max_len,
-                         num_slots=num_slots or b, eos_id=eos_id,
-                         decode_chunk=decode_chunk, mesh=mesh,
-                         batch_axes=batch_axes)
+    engine = ServeEngine(cfg, params, ServeConfig(
+        max_len=max_len, num_slots=num_slots or b, eos_id=eos_id,
+        decode_chunk=decode_chunk, mesh=mesh, batch_axes=batch_axes))
     return engine.generate(batch, max_new_tokens=max_new_tokens)
-
-
-def generate_legacy(params, cfg: ModelConfig, batch: dict, *,
-                    max_new_tokens: int, max_len: int | None = None,
-                    temperature: float = 0.0, rng: jax.Array | None = None,
-                    mesh=None, batch_axes=("data",), eos_id: int | None = None):
-    """The pre-engine static-batch loop: batched prefill + one decode_step
-    (and one host sync) per token, full max_new_tokens always decoded, EOS
-    masked post-hoc. Kept as the engine's parity oracle and as the sampled-
-    decoding path; its prefill/decode closures now come from the process-
-    wide cache instead of recompiling per call."""
-    b, s = batch["tokens"].shape
-    max_len = max_len or (s + _prompt_prefix(cfg, batch) + max_new_tokens)
-    prefill_fn = make_prefill_fn(cfg, max_len, mesh=mesh, batch_axes=batch_axes)
-    decode_fn = make_decode_fn(cfg, mesh=mesh, batch_axes=batch_axes)
-    logits, cache = prefill_fn(params, batch)
-    out = []
-    tok = None
-    for _ in range(max_new_tokens):
-        if temperature > 0:
-            rng, k = jax.random.split(rng)
-            tok = jax.random.categorical(k, logits.astype(jnp.float32) / temperature)
-        else:
-            tok = jnp.argmax(logits, axis=-1)
-        out.append(np.asarray(tok))
-        logits, cache = decode_fn(params, tok[:, None].astype(jnp.int32), cache)
-    gen = np.stack(out, axis=1)
-    if eos_id is not None:
-        # zero out everything after the first EOS per row
-        ended = np.cumsum(gen == eos_id, axis=1) > 0
-        ended = np.concatenate([np.zeros((b, 1), bool), ended[:, :-1]], axis=1)
-        gen = np.where(ended, 0, gen)
-    return gen

@@ -180,6 +180,27 @@ class PageAllocator:
         self.table[slot, :] = self.num_pages
         self._used[slot] = 0
 
+    def resize_slots(self, num_slots: int,
+                     pages_per_slot: int) -> "PageAllocator":
+        """Rebuild the slot tables for a new engine geometry, preserving
+        page refcounts and the free list. Used when a ``PrefixStore``
+        hands this allocator to a new engine: the radix tree's references
+        (pages with no slot holder) carry over untouched, while the slot
+        side — necessarily empty at handoff — is rebuilt at the adopting
+        engine's ``num_slots``/``pages_per_slot``. Refuses to resize while
+        any slot still holds pages."""
+        if self._used.any():
+            held = [int(s) for s in np.nonzero(self._used)[0]]
+            raise RuntimeError(
+                f"resize_slots with live slots {held}: free every slot "
+                f"before handing the allocator to a new engine")
+        self.num_slots = int(num_slots)
+        self.pages_per_slot = int(pages_per_slot)
+        self.table = np.full((self.num_slots, self.pages_per_slot),
+                             self.num_pages, np.int32)
+        self._used = np.zeros((self.num_slots,), np.int32)
+        return self
+
     def stats(self) -> dict:
         return {"num_pages": self.num_pages,
                 "live_pages": self.live_pages,

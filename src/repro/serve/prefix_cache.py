@@ -74,23 +74,41 @@ class PrefixCache:
 
     # -------------------------------------------------------------- lookup
 
-    def match(self, tokens) -> list[int]:
+    def match(self, tokens, touch: bool = True) -> list[int]:
         """Longest cached prefix of ``tokens``: page ids backing
         ``tokens[:n*page_size]`` with ``n`` maximal. Touches the matched
-        chain's LRU stamps. The caller must pin the returned pages (incref
-        or alias) before anything that can evict."""
+        chain's LRU stamps unless ``touch=False`` (a pure probe — the
+        prefix-aware admission policy scans the queue without distorting
+        the LRU order it is scheduling around). The caller must pin the
+        returned pages (incref or alias) before anything that can evict."""
         tokens = np.asarray(tokens)
-        stamp = self._tick()
+        stamp = self._tick() if touch else None
         out: list[int] = []
         children = self._children
         for i in range(len(tokens) // self.page_size):
             node = children.get(self._page_key(tokens, i))
             if node is None:
                 break
-            node.stamp = stamp
+            if touch:
+                node.stamp = stamp
             out.append(node.page)
             children = node.children
         return out
+
+    def lru_pages(self, n: int) -> set[int]:
+        """Page ids of the ``n`` least-recently-used LEAF nodes — the
+        eviction frontier: the next ``n`` calls to ``evict(1)`` would take
+        exactly these (ties broken arbitrarily). Read-only; O(nodes)."""
+        leaves: list[_Node] = []
+        stack = list(self._children.values())
+        while stack:
+            node = stack.pop()
+            if node.children:
+                stack.extend(node.children.values())
+            else:
+                leaves.append(node)
+        leaves.sort(key=lambda nd: nd.stamp)
+        return {leaf.page for leaf in leaves[:n]}
 
     # -------------------------------------------------------------- insert
 

@@ -1,0 +1,108 @@
+"""``PrefixStore`` — server-level persistence for the radix prefix cache.
+
+A ``ServeEngine`` owns its KV page pool, page allocator, and radix tree;
+without a store they die with the engine, so repeated engine instances
+over the SAME params (eval sweeps building one engine per call, a
+relaunched server, per-wave engines in a benchmark) re-prefill prefixes
+they already computed. The store keeps ``{k/v pools, PageAllocator,
+PrefixCache}`` alive between engines: ``ServeEngine.close()`` hands its
+live tree pages over (the tree's one-ref-per-node refcount contract moves
+wholesale — no page is freed or copied), and the next engine constructed
+with the same store, params, and pool geometry adopts them instead of
+initializing cold, so its first admissions alias warm pages
+(``stats["prefix_hits"] > 0`` from request one). This is the
+cross-engine analogue of SGLang's RadixAttention keeping its tree across
+batches.
+
+Keying: entries are keyed by the model config, a cheap content
+fingerprint of the params (tree structure + leaf shapes/dtypes + CRC32 of
+small samples of the leading leaves), and the pool geometry
+(``page_size``/``num_pages`` — pools of a different shape cannot be
+adopted). Each entry additionally holds a weakref to one of the original
+params' leaves: cached KV is only valid for the exact arrays it was
+computed from, and the fingerprint samples rather than hashes every byte,
+so if the original params have been freed the entry is dropped instead of
+trusting a partial digest. ``take`` pops (single ownership — two live
+engines over the same params never share one mutable allocator);
+``put`` overwrites (last close wins).
+"""
+from __future__ import annotations
+
+import weakref
+import zlib
+
+import numpy as np
+
+import jax
+
+
+def params_fingerprint(params) -> int:
+    """Cheap content fingerprint of a params pytree: CRC32 over the tree
+    structure, every leaf's shape/dtype, and a small value sample of the
+    leading leaves (enough to tell checkpoints apart without hashing
+    gigabytes; the store's weakref covers in-place reuse of the arrays)."""
+    leaves, treedef = jax.tree.flatten(params)
+    h = zlib.crc32(str(treedef).encode())
+    for leaf in leaves:
+        h = zlib.crc32(
+            f"{getattr(leaf, 'shape', ())}:{getattr(leaf, 'dtype', '')}"
+            .encode(), h)
+    for leaf in leaves[:2]:
+        sample = np.asarray(leaf.reshape(-1)[:64])
+        h = zlib.crc32(sample.tobytes(), h)
+    return h
+
+
+def _anchor(params):
+    """A weakref-able leaf of ``params`` (None if none supports weakrefs —
+    the store then keys on the fingerprint alone)."""
+    for leaf in jax.tree.leaves(params):
+        try:
+            return weakref.ref(leaf)
+        except TypeError:
+            continue
+    return None
+
+
+class PrefixStore:
+    """Cross-engine radix-tree store (see module docstring). One instance
+    per server process (or per eval sweep); share it by passing the same
+    object as ``ServeConfig.prefix_store`` to every engine."""
+
+    def __init__(self):
+        self._entries: dict[tuple, tuple] = {}
+        self.stats = {"puts": 0, "adoptions": 0, "misses": 0, "expired": 0}
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @staticmethod
+    def key_for(cfg, params, *, page_size: int, num_pages: int) -> tuple:
+        return (cfg, params_fingerprint(params), int(page_size),
+                int(num_pages))
+
+    def put(self, key: tuple, params, state: dict) -> None:
+        """Deposit an engine's live prefix state: ``state`` carries the
+        ``k``/``v`` device pools, the ``PageAllocator`` (all slot rows
+        free — only tree references remain), and the ``PrefixCache``."""
+        self._entries[key] = (_anchor(params), state)
+        self.stats["puts"] += 1
+
+    def take(self, key: tuple) -> dict | None:
+        """Pop the entry for ``key`` (single ownership). Returns None on a
+        miss or when the original params have been garbage-collected (the
+        cached KV can no longer be tied to live arrays)."""
+        item = self._entries.pop(key, None)
+        if item is None:
+            self.stats["misses"] += 1
+            return None
+        anchor, state = item
+        if anchor is not None and anchor() is None:
+            self.stats["expired"] += 1
+            return None
+        self.stats["adoptions"] += 1
+        return state
+
+    def cached_pages(self) -> int:
+        """Total radix-tree pages currently parked in the store."""
+        return sum(len(state["tree"]) for _, state in self._entries.values())

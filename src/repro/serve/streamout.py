@@ -3,9 +3,9 @@
 Finished sequences are handed off to a daemon worker thread (the pattern
 MaxText's ``offline_inference.py`` uses for its emit thread) so
 ``ServeEngine.step()`` never blocks on host-side decode: the engine's hot
-loop only enqueues (uid, tokens) and moves on to the next decode chunk,
-while the worker runs the user callback — detokenization, HTTP writes,
-logging — off the critical path.
+loop only enqueues ``Completion`` records and moves on to the next decode
+chunk, while the worker runs the user callback — detokenization, HTTP
+writes, logging — off the critical path.
 
 Error contract: a callback exception does not kill the engine loop; the
 first one is captured and re-raised from ``drain()`` (which ``run()`` calls
@@ -26,8 +26,9 @@ _STOP = object()
 class StreamOut:
     """Single worker thread draining a completion queue (see module doc).
 
-    ``callback(uid, tokens)`` runs on the worker thread; ``tokens`` is the
-    request's emitted token array ([n] i32, ends at EOS if hit).
+    ``callback(completion)`` runs on the worker thread with the finished
+    request's ``Completion`` record (uid, tokens, finish reason, timing,
+    prefix-reuse count — see serve/results.py).
     """
 
     def __init__(self, callback=None):
@@ -43,9 +44,10 @@ class StreamOut:
     def pending(self) -> int:
         return self._q.unfinished_tasks
 
-    def put(self, uid: int, tokens) -> None:
-        """Enqueue a finished sequence (non-blocking; called from step())."""
-        self._q.put((int(uid), np.asarray(tokens, np.int32)))
+    def put(self, completion) -> None:
+        """Enqueue a finished request's ``Completion`` (non-blocking;
+        called from step())."""
+        self._q.put(completion)
 
     def _worker(self) -> None:
         while True:
@@ -53,10 +55,9 @@ class StreamOut:
             try:
                 if item is _STOP:
                     return
-                uid, toks = item
-                self._results[uid] = toks
+                self._results[item.uid] = item.tokens
                 if self._callback is not None:
-                    self._callback(uid, toks)
+                    self._callback(item)
             except BaseException as e:  # noqa: BLE001 — surfaced via drain()
                 if self._error is None:
                     self._error = e

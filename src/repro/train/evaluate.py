@@ -6,19 +6,28 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.data import synthetic
+from repro.serve.config import ServeConfig
 from repro.serve.engine import ServeEngine
 from repro.serve.scheduler import Request
 
 
 def math_accuracy(params, cfg: ModelConfig, task: synthetic.MathTaskConfig,
                   *, num_problems: int = 64, batch_size: int = 16, mesh=None,
-                  batch_axes=("data",)) -> float:
+                  batch_axes=("data",), serve_cfg: ServeConfig | None = None
+                  ) -> float:
     """Greedy-decode the CoT + answer for held-out problems; exact match.
 
     Problems stream through a ``ServeEngine`` in chunks of ``batch_size``
     slots, so memory scales with ``batch_size`` instead of ``num_problems``,
     and the engine's process-wide compiled-fn cache means repeated calls
-    (train-loop eval) compile prefill/decode exactly once."""
+    (train-loop eval) compile prefill/decode exactly once.
+
+    ``serve_cfg`` overrides the default serving configuration — pass one
+    with ``prefix_cache=True`` and a shared ``prefix_store`` so repeated
+    sweeps (methods x checkpoints over the same prompt set) re-alias cached
+    prefix pages across engine instances instead of re-prefilling
+    (``mesh``/``batch_axes``/``eos_id`` and the capacity fields are still
+    forced to the eval protocol's values)."""
     p_len = synthetic.prompt_len(task)
     toks = [synthetic.sample_problem(task, task.eval_offset + i)[0][:p_len]
             for i in range(num_problems)]
@@ -26,9 +35,16 @@ def math_accuracy(params, cfg: ModelConfig, task: synthetic.MathTaskConfig,
     prompts = np.stack(toks).astype(np.int32)
 
     slots = min(batch_size, num_problems)
-    engine = ServeEngine(cfg, params, max_len=task.seq_len, num_slots=slots,
-                         eos_id=synthetic.EOS, mesh=mesh,
-                         batch_axes=batch_axes)
+    if serve_cfg is None:
+        scfg = ServeConfig(max_len=task.seq_len, num_slots=slots,
+                           eos_id=synthetic.EOS, mesh=mesh,
+                           batch_axes=batch_axes)
+    else:
+        from dataclasses import replace
+        scfg = replace(serve_cfg, max_len=task.seq_len, num_slots=slots,
+                       eos_id=synthetic.EOS, mesh=mesh,
+                       batch_axes=batch_axes)
+    engine = ServeEngine(cfg, params, scfg)
     correct = 0
     # full-slot chunks drained one at a time (not one continuous submit):
     # every admission then has the same [slots, p_len] prefill shape, so
@@ -44,4 +60,7 @@ def math_accuracy(params, cfg: ModelConfig, task: synthetic.MathTaskConfig,
         for i in range(len(chunk)):
             pred = synthetic.decode_answer(res[start + i])
             correct += int(pred == answers[start + i])
+    # hands the radix tree to serve_cfg.prefix_store (when set) so the
+    # next sweep's engine adopts it warm
+    engine.close()
     return correct / num_problems

@@ -209,3 +209,165 @@ def test_high_water_pages_tracks_peak():
     s = alloc.stats()
     assert s["high_water_pages"] == 5 == s["peak_live_pages"]
     assert s["live_pages"] == 3
+
+
+def test_lru_pages_returns_coldest_leaves_without_touching():
+    """lru_pages(n) surfaces the n least-recently-touched LEAF pages (the
+    eviction frontier) and match(touch=False) probes without re-warming."""
+    alloc = PageAllocator(num_pages=16, num_slots=2, pages_per_slot=8)
+    cache = PrefixCache(PS, 16, alloc.incref, alloc.decref)
+    a = np.arange(2 * PS) % 3
+    b = np.concatenate([a[:PS], np.full(PS, 7)])
+    alloc.allocate(0, 2)
+    cache.insert(a, [int(p) for p in alloc.table[0, :2]])
+    alloc.free(0)
+    alloc.allocate(1, 2)
+    cache.insert(b, [int(p) for p in alloc.table[1, :2]])
+    alloc.free(1)
+    cache.match(b)  # warm b: a's leaf is the frontier
+    a_leaf = cache.snapshot()[tuple(int(t) for t in a)]
+    assert cache.lru_pages(1) == {a_leaf}
+    # a touch-free probe must not move a off the frontier...
+    cache.match(a, touch=False)
+    assert cache.lru_pages(1) == {a_leaf}
+    # ...while a touching match re-warms it
+    cache.match(a)
+    assert cache.lru_pages(1) != {a_leaf}
+
+
+def test_allocator_resize_slots_requires_idle_pool():
+    alloc = PageAllocator(num_pages=16, num_slots=2, pages_per_slot=4)
+    alloc.allocate(0, 2)
+    with pytest.raises(RuntimeError, match="slot"):
+        alloc.resize_slots(4, 4)
+    alloc.free(0)
+    out = alloc.resize_slots(4, 6)
+    assert out is alloc
+    assert alloc.table.shape == (4, 6)
+    assert not alloc._used.any()
+
+
+# ------------------------------------------------ cross-engine PrefixStore
+
+
+def _tiny_serve():
+    from repro.configs.base import ModelConfig
+    from repro.models import registry
+    cfg = ModelConfig(name="tiny-store", family="dense", num_layers=2,
+                      d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+                      vocab_size=64, dtype="float32", remat="none")
+    import jax
+    params = registry.get(cfg).init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _store_cfg(store, **over):
+    from repro.serve.config import ServeConfig
+    kw = dict(max_len=48, num_slots=2, decode_chunk=4, min_bucket=8,
+              kv_layout="paged", page_size=8, num_pages=32,
+              prefix_cache=True, prefix_store=store)
+    kw.update(over)
+    return ServeConfig(**kw)
+
+
+def _fewshot_requests(vocab, num=4, seed=21):
+    from repro.serve.scheduler import Request
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(1, vocab, (2 * 8,)).astype(np.int32)
+    toks = [np.concatenate([prefix,
+                            rng.integers(1, vocab, (s,)).astype(np.int32)])
+            for s in range(3, 3 + num)]
+    return lambda: [Request(uid=i, tokens=toks[i], max_new_tokens=6,
+                            arrival=i) for i in range(num)]
+
+
+def test_prefix_store_cross_engine_adoption_token_exact():
+    """A second engine over the same params + store must adopt the first
+    engine's radix tree (prefix_hits > 0 from request one), produce
+    identical tokens, and prefill suffix-only — with the refcount contract
+    (live pages == tree pages) intact through teardown and handoff."""
+    from repro.serve.engine import ServeEngine
+    from repro.serve.prefix_store import PrefixStore
+    cfg, params = _tiny_serve()
+    mk = _fewshot_requests(cfg.vocab_size)
+    store = PrefixStore()
+
+    eng1 = ServeEngine(cfg, params, _store_cfg(store))
+    res1 = eng1.run(mk())
+    tree_pages = eng1._prefix.cached_pages
+    assert tree_pages > 0
+    assert eng1.page_pool_stats()["live_pages"] == tree_pages
+    eng1.close()
+    assert len(store) == 1 and store.cached_pages() == tree_pages
+    assert store.stats["puts"] == 1
+
+    eng2 = ServeEngine(cfg, params, _store_cfg(store))
+    assert store.stats["adoptions"] == 1 and len(store) == 0  # single owner
+    assert eng2._prefix.cached_pages == tree_pages  # adopted, not rebuilt
+    res2 = eng2.run(mk())
+    assert set(res2) == set(res1)
+    for uid in res1:
+        np.testing.assert_array_equal(res2[uid], res1[uid],
+                                      err_msg=f"request {uid}")
+    # every admission hit the adopted tree; only suffixes were prefilled
+    assert eng2.stats["prefix_hits"] == len(res2)
+    assert eng2.stats["prefill_tokens"] < eng1.stats["prefill_tokens"]
+    assert (eng2.page_pool_stats()["live_pages"]
+            == eng2._prefix.cached_pages)
+    eng2.close()
+    assert store.stats["puts"] == 2 and len(store) == 1
+
+
+def test_prefix_store_misses_on_different_params_or_geometry():
+    """Entries are keyed by params content and pool geometry: a different
+    checkpoint or a different page size must NOT adopt cached pages."""
+    import jax
+    from repro.models import registry
+    from repro.serve.engine import ServeEngine
+    from repro.serve.prefix_store import PrefixStore
+    cfg, params = _tiny_serve()
+    params2 = registry.get(cfg).init(jax.random.PRNGKey(1), cfg)
+    mk = _fewshot_requests(cfg.vocab_size)
+    store = PrefixStore()
+    eng1 = ServeEngine(cfg, params, _store_cfg(store))
+    eng1.run(mk())
+    eng1.close()
+    # different checkpoint -> different fingerprint -> cold engine
+    eng2 = ServeEngine(cfg, params2, _store_cfg(store))
+    assert store.stats["adoptions"] == 0
+    assert store.stats["misses"] >= 1
+    assert len(store) == 1  # params1's entry still parked
+    assert eng2._prefix.cached_pages == 0
+    # different pool geometry over the same params -> also a miss
+    eng3 = ServeEngine(cfg, params, _store_cfg(store, page_size=16,
+                                               min_bucket=16))
+    assert store.stats["adoptions"] == 0
+    assert eng3._prefix.cached_pages == 0
+
+
+def test_prefix_store_take_semantics_and_expiry():
+    """Host-level contract: take pops (second take misses); an entry whose
+    params have been garbage-collected is dropped, not adopted."""
+    from repro.serve.prefix_store import PrefixStore
+
+    class Leaf:  # weakref-able stand-in for a params array
+        def __init__(self):
+            self.shape, self.dtype = (4,), "float32"
+
+        def reshape(self, *_):
+            return np.zeros(4, np.float32)
+
+    params = {"w": Leaf()}
+    store = PrefixStore()
+    key = store.key_for("cfg", params, page_size=8, num_pages=32)
+    store.put(key, params, {"k": None, "v": None, "alloc": None,
+                            "tree": []})
+    assert store.take(key) is not None
+    assert store.take(key) is None  # popped: single ownership
+    assert store.stats["misses"] == 1
+    # expiry: the anchored leaf dies -> entry is dropped at take
+    store.put(key, params, {"k": None, "v": None, "alloc": None,
+                            "tree": []})
+    del params
+    assert store.take(key) is None
+    assert store.stats["expired"] == 1

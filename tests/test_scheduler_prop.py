@@ -1,15 +1,20 @@
 """Property tests for the serving scheduler and admission sizing policy:
 FCFS order is preserved under grouping and backpressure push-front, group
-sizes respect the free-slot cap, pow2 padding is tight, buckets cover every
+sizes respect the free-slot cap, prefix-aware admission never starves a
+request (each is bypassed at most max_skips times) and degrades to strict
+FCFS with an empty frontier, pow2 padding is tight, buckets cover every
 admissible prompt length, and EP MoE is exempt from pad rows.
 
 Runs under real Hypothesis when installed, else the deterministic shim.
 """
+from collections import Counter
+
 import numpy as np
 from _hypothesis_shim import given, settings, st
 
 from repro.serve.engine import (_admit_pad_size, _make_buckets, _next_pow2)
-from repro.serve.scheduler import FCFSScheduler, Request
+from repro.serve.scheduler import (FCFSScheduler, PrefixAwareAdmission,
+                                   Request)
 
 
 def _requests(rnd_seed, n, max_len=24):
@@ -113,6 +118,82 @@ def test_push_front_preserves_arrival_order(seed, n, k, late):
     assert drained == ([r.uid for r in g]
                        + [r.uid for r in reqs[len(g):]]
                        + [r.uid for r in newcomers])
+
+
+# --------------------------------------------- prefix-aware admission
+
+
+def _counting_policy(policy):
+    """Wrap on_admit to count how many times each uid is bypassed."""
+    counts = Counter()
+    orig = policy.on_admit
+
+    def on_admit(admitted, bypassed):
+        for r in bypassed:
+            counts[r.uid] += 1
+        orig(admitted, bypassed)
+
+    policy.on_admit = on_admit
+    return counts
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10**6), n=st.integers(1, 24),
+       free_slots=st.integers(1, 4), max_skips=st.integers(1, 5),
+       hot_frac=st.sampled_from([0.0, 0.3, 0.7, 1.0]))
+def test_prefix_aware_never_starves(seed, n, free_slots, max_skips,
+                                    hot_frac):
+    """Under arbitrary frontier pressure the prefix-aware policy admits
+    every request exactly once, and no request is ever bypassed more than
+    max_skips times — the aging cap's starvation bound."""
+    rng = np.random.default_rng(seed)
+    reqs = _requests(seed, n)
+    hot = {r.uid for r in reqs if rng.random() < hot_frac}
+    policy = PrefixAwareAdmission(
+        lambda r: {1} if r.uid in hot else set(),
+        lambda: {1},
+        max_skips=max_skips)
+    counts = _counting_policy(policy)
+    sch = FCFSScheduler(policy)
+    for r in reqs:
+        sch.submit(r)
+    drained = [r.uid for g in _drain(sch, free_slots) for r in g]
+    assert sorted(drained) == sorted(r.uid for r in reqs)
+    assert all(c <= max_skips for c in counts.values()), dict(counts)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10**6), n=st.integers(1, 20),
+       free_slots=st.integers(1, 8))
+def test_prefix_aware_with_empty_frontier_is_strict_fcfs(seed, n,
+                                                         free_slots):
+    """With nothing at the eviction frontier the policy must be
+    bit-identical to the policy-less scheduler: same groups, same order."""
+    reqs = _requests(seed, n)
+    plain, aware = FCFSScheduler(), FCFSScheduler(
+        PrefixAwareAdmission(lambda r: set(), lambda: set()))
+    for r in reqs:
+        plain.submit(r)
+        aware.submit(r)
+    got = [[r.uid for r in g] for g in _drain(aware, free_slots)]
+    want = [[r.uid for r in g] for g in _drain(plain, free_slots)]
+    assert got == want
+    assert aware.policy.stats["bypass_admissions"] == 0
+
+
+def test_prefix_aware_rescues_frontier_hit_ahead_of_fcfs():
+    """A queued request whose cached pages sit at the frontier is admitted
+    before earlier cold requests — and the cold requests it bypassed still
+    drain in their original relative order."""
+    sch = FCFSScheduler(PrefixAwareAdmission(
+        lambda r: {7} if r.uid == 2 else set(), lambda: {7}))
+    for uid in range(4):
+        sch.submit(Request(uid=uid, tokens=np.zeros(8, np.int32),
+                           max_new_tokens=1))
+    groups = _drain(sch, 1)
+    assert [r.uid for g in groups for r in g] == [2, 0, 1, 3]
+    assert sch.policy.stats["bypass_admissions"] == 1
+    assert sch.policy.stats["bypassed"] == 2
 
 
 @settings(max_examples=50, deadline=None)

@@ -1,6 +1,7 @@
 """Serving tests: engine-vs-legacy token-exact parity across model families,
 per-slot EOS termination, staggered admission vs solo runs, slot insertion,
-scheduler policy, and compile-once behavior of the evaluator."""
+scheduler policy, the ServeConfig surface (validation + deprecation shim),
+grouped prefix admission, and compile-once behavior of the evaluator."""
 import jax
 import numpy as np
 import pytest
@@ -10,7 +11,10 @@ from repro.configs.base import ModelConfig
 from repro.data.synthetic import MathTaskConfig
 from repro.models import registry
 from repro.serve import engine as engine_mod
-from repro.serve.engine import ServeEngine, generate, generate_legacy
+from repro.serve._oracle import generate_legacy
+from repro.serve.config import ServeConfig
+from repro.serve.engine import ServeEngine, generate
+from repro.serve.results import Completion
 from repro.serve.scheduler import FCFSScheduler, Request
 
 TINY = ModelConfig(name="tiny-serve", family="dense", num_layers=2,
@@ -23,6 +27,10 @@ PARITY_ARCHS = ["llama3.2-1b", "mamba2-2.7b", "qwen3-moe-30b-a3b"]
 
 def _params(cfg, seed=0):
     return registry.get(cfg).init(jax.random.PRNGKey(seed), cfg)
+
+
+def _eng(cfg, params, **kw):
+    return ServeEngine(cfg, params, ServeConfig(**kw))
 
 
 def _prompts(cfg, b, s, seed=1):
@@ -65,7 +73,7 @@ def test_per_slot_eos_stops_decode_early():
     assert len(hits) and hits[0] < 16, \
         f"attractor not early enough ({hits[:1]})"
 
-    eng = ServeEngine(cfg, params, max_len=8 + 32, num_slots=4, eos_id=eos,
+    eng = _eng(cfg, params, max_len=8 + 32, num_slots=4, eos_id=eos,
                       decode_chunk=4)
     out = eng.generate(batch, max_new_tokens=32)
     leg = generate_legacy(params, cfg, batch, max_new_tokens=32, eos_id=eos)
@@ -86,12 +94,12 @@ def test_staggered_admission_matches_solo_runs(arch):
                     tokens=rng.integers(0, cfg.vocab_size, (lens[i],)),
                     max_new_tokens=9, arrival=arrivals[i])
             for i in range(len(lens))]
-    eng = ServeEngine(cfg, params, max_len=32, num_slots=2, decode_chunk=4)
+    eng = _eng(cfg, params, max_len=32, num_slots=2, decode_chunk=4)
     shared = eng.run([Request(uid=r.uid, tokens=r.tokens, arrival=r.arrival,
                               max_new_tokens=r.max_new_tokens) for r in reqs])
     assert eng.stats["admitted"] == len(reqs)
     for r in reqs:
-        solo_eng = ServeEngine(cfg, params, max_len=32, num_slots=1,
+        solo_eng = _eng(cfg, params, max_len=32, num_slots=1,
                                decode_chunk=4)
         solo = solo_eng.run([Request(uid=0, tokens=r.tokens,
                                      max_new_tokens=r.max_new_tokens)])
@@ -184,11 +192,11 @@ def test_engine_temperature_sampling_is_per_slot():
     params = _params(cfg)
     rng = np.random.default_rng(9)
     toks = [rng.integers(0, cfg.vocab_size, (8,)) for _ in range(3)]
-    eng = ServeEngine(cfg, params, max_len=24, num_slots=3, temperature=0.8,
+    eng = _eng(cfg, params, max_len=24, num_slots=3, temperature=0.8,
                       rng=jax.random.PRNGKey(2))
     full = eng.run([Request(uid=i, tokens=toks[i], max_new_tokens=6)
                     for i in range(3)])
-    solo_eng = ServeEngine(cfg, params, max_len=24, num_slots=1,
+    solo_eng = _eng(cfg, params, max_len=24, num_slots=1,
                            temperature=0.8, rng=jax.random.PRNGKey(2))
     solo = solo_eng.run([Request(uid=1, tokens=toks[1], max_new_tokens=6)])
     np.testing.assert_array_equal(full[1], solo[1])
@@ -223,8 +231,8 @@ def test_paged_engine_matches_dense_engine(arch):
     params = _params(cfg)
     mk = _mixed_requests(cfg)
     kw = dict(max_len=40, num_slots=3, decode_chunk=4)
-    dense = ServeEngine(cfg, params, **kw).run(mk())
-    peng = ServeEngine(cfg, params, kv_layout="paged", page_size=4, **kw)
+    dense = _eng(cfg, params, **kw).run(mk())
+    peng = _eng(cfg, params, kv_layout="paged", page_size=4, **kw)
     paged = peng.run(mk())
     assert set(paged) == set(dense)
     for uid in dense:
@@ -236,13 +244,12 @@ def test_paged_engine_matches_dense_engine(arch):
     assert peng.page_pool_stats()["peak_live_pages"] > 0
     assert peng.page_pool_stats()["live_pages"] == 0  # all freed on finish
     # undersized pool: same tokens, strictly smaller cache, backpressure
-    seng = ServeEngine(cfg, params, kv_layout="paged", page_size=4,
+    seng = _eng(cfg, params, kv_layout="paged", page_size=4,
                        num_pages=12, **kw)
     small = seng.run(mk())
     for uid in dense:
         np.testing.assert_array_equal(small[uid], dense[uid])
-    assert seng.kv_cache_bytes() < ServeEngine(cfg, params,
-                                               **kw).kv_cache_bytes()
+    assert seng.kv_cache_bytes() < _eng(cfg, params, **kw).kv_cache_bytes()
     assert seng.stats["backpressure"] > 0
 
 
@@ -256,8 +263,8 @@ def test_chunked_prefill_matches_single_shot(arch, kv_layout):
     mk = _mixed_requests(cfg)
     kw = dict(max_len=40, num_slots=3, decode_chunk=4, kv_layout=kv_layout,
               page_size=4)
-    single = ServeEngine(cfg, params, **kw).run(mk())
-    ceng = ServeEngine(cfg, params, prefill_chunk=8, **kw)
+    single = _eng(cfg, params, **kw).run(mk())
+    ceng = _eng(cfg, params, prefill_chunk=8, **kw)
     chunked = ceng.run(mk())
     assert set(chunked) == set(single)
     for uid in single:
@@ -273,7 +280,7 @@ def test_prefill_compile_count_bounded_by_buckets():
     cfg = TINY
     params = _params(cfg)
     before = set(engine_mod._FN_CACHE)
-    eng = ServeEngine(cfg, params, max_len=48, num_slots=4, decode_chunk=4)
+    eng = _eng(cfg, params, max_len=48, num_slots=4, decode_chunk=4)
     rng = np.random.default_rng(2)
     reqs = [Request(uid=i, tokens=rng.integers(1, cfg.vocab_size, (n,)),
                     max_new_tokens=6)
@@ -288,7 +295,7 @@ def test_prefill_compile_count_bounded_by_buckets():
 
 
 def test_submit_rejects_zero_length_prompt():
-    eng = ServeEngine(TINY, _params(TINY), max_len=16, num_slots=1)
+    eng = _eng(TINY, _params(TINY), max_len=16, num_slots=1)
     req = Request(uid=0, tokens=np.ones(4, np.int32), max_new_tokens=2)
     req.tokens = np.zeros((0,), np.int32)  # bypass Request validation
     with pytest.raises(ValueError, match="empty prompt"):
@@ -301,7 +308,7 @@ def test_pool_exhausted_vs_backpressure():
     from repro.serve.pages import PoolExhausted
     cfg = TINY
     params = _params(cfg)
-    eng = ServeEngine(cfg, params, max_len=32, num_slots=4,
+    eng = _eng(cfg, params, max_len=32, num_slots=4,
                       kv_layout="paged", page_size=4, num_pages=5)
     # 8 prompt + 20 new = 28 positions = 7 pages > 5-page pool
     with pytest.raises(PoolExhausted, match="grow num_pages"):
@@ -313,7 +320,7 @@ def test_pool_exhausted_vs_backpressure():
     res = eng.run([Request(uid=i, tokens=toks[i], max_new_tokens=8)
                    for i in range(3)])
     assert eng.stats["backpressure"] > 0
-    deng = ServeEngine(cfg, params, max_len=32, num_slots=4)
+    deng = _eng(cfg, params, max_len=32, num_slots=4)
     dres = deng.run([Request(uid=i, tokens=toks[i], max_new_tokens=8)
                      for i in range(3)])
     for uid in dres:
@@ -324,7 +331,7 @@ def test_paged_rejects_unsupported_family():
     cfg = TINY.replace(use_mla=True, kv_lora_rank=16, qk_rope_head_dim=8,
                        qk_nope_head_dim=8, v_head_dim=16)
     with pytest.raises(ValueError, match="paged KV cache is not supported"):
-        ServeEngine(cfg, None, max_len=16, num_slots=1, kv_layout="paged")
+        _eng(cfg, None, max_len=16, num_slots=1, kv_layout="paged")
 
 
 def test_fn_cache_lru_eviction():
@@ -377,10 +384,10 @@ def test_prefix_cache_token_exact_and_suffix_only_prefill():
     mk = _shared_prefix_requests(cfg)
     kw = dict(max_len=48, num_slots=1, decode_chunk=4, min_bucket=8)
     pkw = dict(kv_layout="paged", page_size=8, num_pages=32, **kw)
-    dense = ServeEngine(cfg, params, **kw).run(mk())
-    off_eng = ServeEngine(cfg, params, **pkw)
+    dense = _eng(cfg, params, **kw).run(mk())
+    off_eng = _eng(cfg, params, **pkw)
     off = off_eng.run(mk())
-    on_eng = ServeEngine(cfg, params, prefix_cache=True, **pkw)
+    on_eng = _eng(cfg, params, prefix_cache=True, **pkw)
     on = on_eng.run(mk())
     assert set(on) == set(off) == set(dense)
     for uid in dense:
@@ -422,8 +429,8 @@ def test_preempt_and_requeue_token_exact(temperature):
     kw = dict(max_len=32, num_slots=4, decode_chunk=4, min_bucket=8,
               kv_layout="paged", page_size=4, temperature=temperature,
               rng=jax.random.PRNGKey(6))
-    ample = ServeEngine(cfg, params, num_pages=40, **kw).run(mk())
-    peng = ServeEngine(cfg, params, num_pages=6, preempt=True, **kw)
+    ample = _eng(cfg, params, num_pages=40, **kw).run(mk())
+    peng = _eng(cfg, params, num_pages=6, preempt=True, **kw)
     pre = peng.run(mk())
     assert set(pre) == set(ample)
     for uid in ample:
@@ -440,8 +447,8 @@ def test_prefix_cache_with_preemption_token_exact():
     params = _params(cfg)
     mk = _shared_prefix_requests(cfg, max_new=8)
     kw = dict(max_len=48, num_slots=3, decode_chunk=4, min_bucket=8)
-    dense = ServeEngine(cfg, params, **kw).run(mk())
-    eng = ServeEngine(cfg, params, kv_layout="paged", page_size=8,
+    dense = _eng(cfg, params, **kw).run(mk())
+    eng = _eng(cfg, params, kv_layout="paged", page_size=8,
                       num_pages=10, prefix_cache=True, preempt=True, **kw)
     out = eng.run(mk())
     for uid in dense:
@@ -454,27 +461,166 @@ def test_prefix_cache_with_preemption_token_exact():
 
 
 def test_stream_out_matches_run_and_propagates_errors():
-    """on_complete fires off the hot loop for every finished request with
-    exactly run()'s tokens; a raising callback surfaces from run() (via
-    drain) instead of being swallowed on the worker thread."""
+    """on_complete fires off the hot loop with a ``Completion`` record for
+    every finished request, carrying exactly run()'s tokens; a raising
+    callback surfaces from run() (via drain) instead of being swallowed on
+    the worker thread."""
     cfg = TINY
     params = _params(cfg)
     mk = _mixed_requests(cfg, max_new=4)
     got = {}
-    eng = ServeEngine(cfg, params, max_len=40, num_slots=3, decode_chunk=4,
-                      on_complete=lambda uid, t: got.__setitem__(uid, t))
+    eng = _eng(cfg, params, max_len=40, num_slots=3, decode_chunk=4,
+               on_complete=lambda c: got.__setitem__(c.uid, c))
     res = eng.run(mk())
     assert set(got) == set(res)
     for uid in res:
-        np.testing.assert_array_equal(got[uid], res[uid])
+        assert isinstance(got[uid], Completion)
+        np.testing.assert_array_equal(got[uid].tokens, res[uid])
+        assert got[uid].finish_reason in ("eos", "length")
+        assert got[uid].done_step >= got[uid].first_token_step
 
-    def boom(uid, toks):
+    def boom(comp):
         raise RuntimeError("detok failed")
 
-    beng = ServeEngine(cfg, params, max_len=40, num_slots=3, decode_chunk=4,
-                       on_complete=boom)
+    beng = _eng(cfg, params, max_len=40, num_slots=3, decode_chunk=4,
+                on_complete=boom)
     with pytest.raises(RuntimeError, match="detok failed"):
         beng.run(mk())
+
+
+# ------------------------------- ServeConfig surface + grouped admission
+
+
+def test_serve_config_validation():
+    with pytest.raises(ValueError, match="decode_chunk"):
+        ServeConfig(max_len=32, num_slots=2, decode_chunk=0)
+    with pytest.raises(ValueError, match="min_bucket"):
+        ServeConfig(max_len=32, num_slots=2, min_bucket=12)
+    with pytest.raises(ValueError, match="prefix_cache"):
+        ServeConfig(max_len=32, num_slots=2, prefix_cache=True)
+    with pytest.raises(ValueError, match="admission"):
+        ServeConfig(max_len=32, num_slots=2, admission="lifo")
+    with pytest.raises(ValueError, match="prefix_aware"):
+        ServeConfig(max_len=32, num_slots=2, admission="prefix_aware")
+    with pytest.raises(ValueError, match="prefix_store"):
+        ServeConfig(max_len=32, num_slots=2,
+                    prefix_store=object())
+
+
+def test_legacy_kwargs_shim_warns_and_matches_new_surface():
+    """ServeEngine(cfg, params, **kwargs) still works for one release: it
+    warns, builds the same ServeConfig, and wraps a legacy (uid, tokens)
+    on_complete callback."""
+    cfg = TINY
+    params = _params(cfg)
+    mk = _mixed_requests(cfg, max_new=4)
+    got = {}
+    with pytest.warns(DeprecationWarning, match="ServeConfig"):
+        leg_eng = ServeEngine(cfg, params, max_len=40, num_slots=3,
+                              decode_chunk=4,
+                              on_complete=lambda uid, t:
+                              got.__setitem__(uid, t))
+    assert leg_eng.serve_cfg.max_len == 40
+    leg = leg_eng.run(mk())
+    new = _eng(cfg, params, max_len=40, num_slots=3, decode_chunk=4).run(mk())
+    assert set(leg) == set(new) == set(got)
+    for uid in new:
+        np.testing.assert_array_equal(leg[uid], new[uid])
+        np.testing.assert_array_equal(got[uid], new[uid])
+    with pytest.raises(TypeError, match="both a ServeConfig"):
+        ServeEngine(cfg, params, ServeConfig(max_len=40, num_slots=1),
+                    decode_chunk=4)
+
+
+def test_run_result_carries_completions():
+    cfg = TINY
+    params = _params(cfg)
+    mk = _mixed_requests(cfg, max_new=4)
+    res = _eng(cfg, params, max_len=40, num_slots=3, decode_chunk=4).run(mk())
+    assert set(res.completions) == set(res)
+    for uid, comp in res.completions.items():
+        assert comp.uid == uid
+        np.testing.assert_array_equal(comp.tokens, res[uid])
+        assert comp.finish_reason == "length"  # no eos_id configured
+
+
+def test_engine_close_is_terminal():
+    cfg = TINY
+    params = _params(cfg)
+    eng = _eng(cfg, params, max_len=16, num_slots=1)
+    eng.close()
+    eng.close()  # idempotent
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.submit(Request(uid=0, tokens=np.ones(4, np.int32),
+                           max_new_tokens=2))
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.step()
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_grouped_prefix_admission_token_exact(temperature):
+    """Same-start grouped admission (prefill_rows > 1: one [rows, bucket]
+    suffix prefill per wave) must reproduce one-request-per-call admission
+    token-for-token — greedy AND sampled (per-slot key streams make the
+    grouping invisible) — with identical suffix-only prefill_tokens but
+    fewer prefill dispatches."""
+    cfg = TINY
+    params = _params(cfg)
+    rng = np.random.default_rng(17)
+    prefix = rng.integers(1, cfg.vocab_size, (16,)).astype(np.int32)
+    prompts = [np.concatenate([prefix,
+                               rng.integers(1, cfg.vocab_size, (5,))
+                               .astype(np.int32)])
+               for _ in range(8)]
+    kw = dict(max_len=32, num_slots=4, decode_chunk=4, min_bucket=8,
+              kv_layout="paged", page_size=8, num_pages=32,
+              prefix_cache=True, temperature=temperature,
+              rng=jax.random.PRNGKey(3))
+    mk = lambda: [Request(uid=i, tokens=prompts[i],  # noqa: E731
+                          max_new_tokens=6) for i in range(len(prompts))]
+    one_eng = _eng(cfg, params, prefill_rows=1, **kw)
+    one = one_eng.run(mk())
+    grp_eng = _eng(cfg, params, prefill_rows=4, **kw)
+    grp = grp_eng.run(mk())
+    assert set(grp) == set(one)
+    for uid in one:
+        np.testing.assert_array_equal(grp[uid], one[uid],
+                                      err_msg=f"request {uid}")
+    # same suffix-only token accounting, fewer dispatches
+    assert grp_eng.stats["prefill_tokens"] == one_eng.stats["prefill_tokens"]
+    assert grp_eng.stats["prefills"] < one_eng.stats["prefills"]
+    assert grp_eng.stats["prefix_hits"] == one_eng.stats["prefix_hits"] > 0
+
+
+def test_prefix_aware_admission_token_exact_vs_fcfs():
+    """admission='prefix_aware' may only reorder admissions, never change
+    tokens: every request must complete with exactly its strict-FCFS
+    output (per-slot key streams make order invisible to sampling)."""
+    cfg = TINY
+    params = _params(cfg)
+    rng = np.random.default_rng(23)
+    prefix = rng.integers(1, cfg.vocab_size, (16,)).astype(np.int32)
+    toks = []
+    for i in range(10):
+        tail = rng.integers(1, cfg.vocab_size, (3 + (i % 4),))
+        toks.append(np.concatenate([prefix, tail]).astype(np.int32)
+                    if i % 2 == 0 else
+                    rng.integers(1, cfg.vocab_size,
+                                 (16 + (i % 5),)).astype(np.int32))
+    mk = lambda: [Request(uid=i, tokens=toks[i],  # noqa: E731
+                          max_new_tokens=5, arrival=i // 3)
+                  for i in range(len(toks))]
+    kw = dict(max_len=32, num_slots=2, decode_chunk=4, min_bucket=8,
+              kv_layout="paged", page_size=8, num_pages=24,
+              prefix_cache=True, prefix_cache_pages=6)
+    fcfs = _eng(cfg, params, admission="fcfs", **kw).run(mk())
+    pa_eng = _eng(cfg, params, admission="prefix_aware",
+                  admission_max_skips=3, **kw)
+    pa = pa_eng.run(mk())
+    assert set(pa) == set(fcfs)  # nobody starves
+    for uid in fcfs:
+        np.testing.assert_array_equal(pa[uid], fcfs[uid],
+                                      err_msg=f"request {uid}")
 
 
 def test_insert_slots_paged_routes_through_table():
