@@ -16,6 +16,11 @@ down (phase A / swap-or-dispatch / phase B host µs from
 hit rate; ``--async-swap off`` benches the synchronous boundary for
 comparison.
 
+A final ``adagradselect_dense_obs`` row reruns the dense row with the obs
+layer fully enabled (span tracing + selection telemetry) and reports
+``obs_overhead`` — obs-on steps/s as a fraction of obs-off (1.0 = free);
+``diff_baseline`` gates it at 3%.
+
 Run directly (``python -m benchmarks.bench_memory [--json out.json]
 [--smoke]``) or through ``benchmarks/run.py`` (``--json`` there embeds this
 table for trajectory tracking).
@@ -29,6 +34,7 @@ import os
 import numpy as np
 
 from benchmarks.common import BENCH_MODEL, GLOBAL_BATCH, SEQ_LEN
+from repro import obs
 from repro.configs.base import OptimizerConfig, SelectConfig, TrainConfig
 from repro.core import offload
 from repro.train.trainer import Trainer
@@ -102,6 +108,28 @@ def collect(steps: int = 30, async_swap: bool = True) -> list[dict]:
         r["device_vs_full"] = r["device_bytes"] / max(1, full["device_bytes"])
         r["step_time_vs_full"] = (r["step_time_us"]
                                   / max(1e-9, full["step_time_us"]))
+
+    # obs-overhead row: the dense AdaGradSelect run again with the FULL obs
+    # layer on (span tracing + per-step selection telemetry, i.e. the
+    # worst-case host-sync path). obs_overhead = obs-on steps/s as a
+    # fraction of the obs-off dense row's (1.0 = free); diff_baseline gates
+    # it at 3%, which also pins the always-on registry cost in the obs-off
+    # rows — both ends of the "no measurable step-time cost" contract.
+    dense = next(r for r in table if r["name"] == "adagradselect_dense")
+    obs.enable()
+    try:
+        tr = Trainer(_tcfg("adagradselect", "device", "none", steps,
+                           async_swap))
+        log = tr.train()
+    finally:
+        obs.disable()
+    obs_us = float(np.mean(log.step_times[3:])) * 1e6
+    table.append({
+        "name": "adagradselect_dense_obs", "method": "adagradselect",
+        "residency": "device", "offload": "none",
+        "step_time_us": obs_us, "final_loss": float(log.losses[-1]),
+        "obs_overhead": dense["step_time_us"] / max(1e-9, obs_us),
+    })
     LAST_TABLE = table
     return table
 
@@ -110,6 +138,11 @@ def run(steps: int = 30):
     """benchmarks/run.py rows: name, step_us, derived (memory columns)."""
     out = []
     for r in collect(steps):
+        if "obs_overhead" in r:  # obs row: timing ratio only, no residency
+            out.append((f"memory/{r['name']}", r["step_time_us"],
+                        f"obs_overhead={r['obs_overhead']:.3f};"
+                        f"loss={r['final_loss']:.4f}"))
+            continue
         derived = (f"dev_bytes={r['device_bytes']};"
                    f"host_bytes={r['host_bytes']};"
                    f"dev_vs_full={r['device_vs_full']:.3f};"
@@ -143,6 +176,12 @@ def main() -> int:
     print(hdr)
     mib = 1 << 20
     for r in table:
+        if "obs_overhead" in r:
+            print(f"{r['name']:24s} {'—':>11s} {'—':>9s} {'—':>10s} "
+                  f"{'—':>8s} {r['step_time_us']:9.1f}   "
+                  f"obs_overhead={r['obs_overhead']:.3f} "
+                  f"(obs-on steps/s vs obs-off)")
+            continue
         print(f"{r['name']:24s} {r['device_bytes']/mib:11.2f} "
               f"{r['host_bytes']/mib:9.2f} {r['modeled_bytes']/mib:10.2f} "
               f"{r['device_vs_full']:8.3f} {r['step_time_us']:9.1f}")

@@ -11,6 +11,13 @@ Key metrics (direction-aware, default tolerance 20%, per-metric overrides):
     the same runner, so CI noise largely cancels). Tight 10% tolerance: the
     async swap planner's whole point is keeping the boundary off the
     critical path, and a regression here means the overlap broke.
+  * ``obs_overhead`` — obs-on steps/s as a fraction of obs-off on the dense
+    AdaGradSelect row (memory table; higher is better; a same-process timing
+    ratio, so CI noise largely cancels). The baseline is capped at 1.0 with
+    a tight 3% tolerance: the observability contract is "fully-enabled
+    tracing + selection telemetry costs < ~3% of a step, disabled mode
+    costs nothing measurable" — growth here means a host sync or hot-path
+    allocation crept into the instrumented step.
   * ``uniform_engine_vs_legacy`` / ``staggered_engine_vs_legacy`` — the
     serve engine's tok/s (goodput) as a multiple of the legacy static-batch
     loop (serve table; higher is better). Ratios of two timings on the same
@@ -78,14 +85,15 @@ import sys
 # dependent; tolerance (optional) overrides the CLI/default tolerance for
 # that one metric
 _MEM_ROW = "adagradselect_banked"
+_OBS_ROW = "adagradselect_dense_obs"
 
 
-def _mem_col(col: str):
+def _mem_col(col: str, row_name: str = _MEM_ROW):
     def extract(payload: dict):
         table = payload.get("memory_table") or []
         rows = table["rows"] if isinstance(table, dict) else table
         for row in rows or []:
-            if row.get("name") == _MEM_ROW:
+            if row.get("name") == row_name:
                 return row.get(col)
         return None
     return extract
@@ -95,6 +103,7 @@ KEY_METRICS = (
     ("banked_device_vs_full", _mem_col("device_vs_full"), -1, None, None),
     ("banked_step_time_vs_full", _mem_col("step_time_vs_full"),
      -1, None, 0.10),
+    ("obs_overhead", _mem_col("obs_overhead", _OBS_ROW), +1, 1.0, 0.03),
     ("uniform_engine_vs_legacy",
      lambda p: (p.get("serve_table") or {}).get("uniform_engine_vs_legacy"),
      +1, None, None),

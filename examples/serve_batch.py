@@ -1,6 +1,7 @@
 """Batched serving demo: continuous-batching engine (prefill into slots +
-chunked decode with a persistent KV cache), report tokens/sec and page-pool
-utilization; runs any smoke arch (--arch).
+chunked decode with a persistent KV cache), report tokens/sec plus the
+engine's consolidated ``stats_snapshot()`` (counters, per-request latency
+histograms, page pool, fn-cache); runs any smoke arch (--arch).
 
   PYTHONPATH=src python examples/serve_batch.py --arch llama3.2-1b
   PYTHONPATH=src python examples/serve_batch.py --arch mamba2-2.7b
@@ -21,6 +22,7 @@ request one — the cross-engine reuse pattern of repeated eval sweeps over
 the same few-shot prompts.
 """
 import argparse
+import json
 import time
 
 import jax
@@ -77,16 +79,17 @@ def main():
     dt = time.perf_counter() - t0
     print(f"[{args.arch}] batch={args.batch} prompt={args.prompt_len} "
           f"new={args.new_tokens} kv_layout={args.kv_layout}")
-    pool = engine.page_pool_stats()
-    util = (f"  pool high water {pool['high_water_pages']}/"
-            f"{pool['num_pages']} pages "
-            f"({pool['high_water_pages'] / pool['num_pages']:.0%} peak)"
-            if pool is not None else "  pool n/a (dense layout)")
     print(f"  {args.batch * args.new_tokens / dt:8.1f} tok/s "
           f"({dt*1e3/args.new_tokens:.1f} ms/step)"
-          f"  | cache {engine.kv_cache_bytes() / 1e6:.2f} MB |{util}")
+          f"  | cache {engine.kv_cache_bytes() / 1e6:.2f} MB")
     print(f"  sample: {out[0][:16].tolist()}")
+    # one consolidated dump (engine counters, latency histograms, page pool,
+    # scheduler, fn-cache) — key structure documented in serve/engine.py
+    print("  stats_snapshot:")
+    print("  " + json.dumps(engine.stats_snapshot(), indent=2)
+          .replace("\n", "\n  "))
 
+    pool = engine.page_pool_stats()
     if args.kv_layout == "paged" and pool is not None:
         shared_prefix_demo(cfg, params, page_size=args.page_size)
         two_sweep_demo(cfg, params, page_size=args.page_size)

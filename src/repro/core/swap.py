@@ -51,6 +51,7 @@ from concurrent.futures import ThreadPoolExecutor
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core import adagradselect
 from repro.core import masked_adamw as ma
 
@@ -85,27 +86,50 @@ class SwapStats:
     ``boundaries`` counts selection changes that required bank traffic;
     ``predicted_hits`` those fully absorbed by the background dispatch;
     ``sync_swaps`` the fallback (mispredict, overflow-on-predicted-plan, or
-    async disabled). Timing fields are host-side wall time accumulated by
-    the two-phase driver: ``phase_a_us`` includes the forward/select device
-    wait (the indices sync), ``swap_us`` the boundary resolve+commit (or the
-    full synchronous swap), ``phase_b_us`` the apply + dispatch issue."""
+    async disabled). Phase timing lives in obs histograms — the one timing
+    source of truth (the banked driver times each phase once via
+    ``obs.timed`` and trace spans ride the same measurement): ``phase_a``
+    includes the forward/select device wait (the indices sync), ``swap``
+    the boundary resolve+commit (or the full synchronous swap), ``phase_b``
+    the apply + dispatch issue. The historical accumulated-µs fields
+    (``phase_a_us`` etc., the bench JSON schema) are read-only views over
+    those histograms' totals."""
     steps: int = 0
     boundaries: int = 0
     predicted_hits: int = 0
     sync_swaps: int = 0
     dispatches: int = 0
-    phase_a_us: float = 0.0
-    swap_us: float = 0.0
-    phase_b_us: float = 0.0
+    phase_a: obs.Histogram = dataclasses.field(
+        default_factory=obs.Histogram, repr=False)
+    swap: obs.Histogram = dataclasses.field(
+        default_factory=obs.Histogram, repr=False)
+    phase_b: obs.Histogram = dataclasses.field(
+        default_factory=obs.Histogram, repr=False)
+
+    @property
+    def phase_a_us(self) -> float:
+        return self.phase_a.total
+
+    @property
+    def swap_us(self) -> float:
+        return self.swap.total
+
+    @property
+    def phase_b_us(self) -> float:
+        return self.phase_b.total
 
     @property
     def predicted_hit_rate(self) -> float:
         return self.predicted_hits / self.boundaries if self.boundaries else 1.0
 
     def as_dict(self) -> dict:
-        d = dataclasses.asdict(self)
-        d["predicted_hit_rate"] = self.predicted_hit_rate
-        return d
+        return {"steps": self.steps, "boundaries": self.boundaries,
+                "predicted_hits": self.predicted_hits,
+                "sync_swaps": self.sync_swaps,
+                "dispatches": self.dispatches,
+                "phase_a_us": self.phase_a_us, "swap_us": self.swap_us,
+                "phase_b_us": self.phase_b_us,
+                "predicted_hit_rate": self.predicted_hit_rate}
 
 
 class SwapPlanner:
@@ -128,6 +152,15 @@ class SwapPlanner:
         self.inline = inline
         self.staging = StagingPool()
         self.stats = SwapStats()
+        # last-planner-wins registry bindings: the active trainer's phase
+        # histograms and boundary counters show up in obs.snapshot()
+        for name, hist in (("phase_a_us", self.stats.phase_a),
+                           ("swap_us", self.stats.swap),
+                           ("phase_b_us", self.stats.phase_b)):
+            obs.metrics.register(name, hist, subsystem="swap")
+        obs.metrics.register("banked", self.stats.as_dict, subsystem="swap")
+        self._c_mispredicts = obs.metrics.counter("mispredicts",
+                                                  subsystem="swap")
         self._pool: ThreadPoolExecutor | None = None
         self._pending = None  # Future | dict -> dict | None
         self._predict = jax.jit(
@@ -148,19 +181,22 @@ class SwapPlanner:
         slot_map = np.array(slot_map, np.int32)  # snapshot: host-global map
 
         def job():
-            idx = np.asarray(pred_idx)
-            mask = np.zeros((self.num_blocks,), bool)
-            mask[idx[idx < self.num_blocks]] = True
-            try:
-                plans = ma.plan_swap(self.partition, slot_map, mask, caps)
-            except RuntimeError:
-                # predicted selection overflows the banks — the real one may
-                # not (or will raise on the sync path with full context)
-                return {"idx": idx, "failed": True}
-            staged = ma.prefetch_admissions(plans, store, self.staging)
-            new_store = ma.writeback_evictions(plans, banks, store)
-            return {"idx": idx, "failed": False, "plans": plans,
-                    "staged": staged, "store": new_store}
+            # the span puts the boundary work on its own timeline track
+            # when the job runs on the "swap-planner" background thread
+            with obs.span("swap_dispatch_job"):
+                idx = np.asarray(pred_idx)
+                mask = np.zeros((self.num_blocks,), bool)
+                mask[idx[idx < self.num_blocks]] = True
+                try:
+                    plans = ma.plan_swap(self.partition, slot_map, mask, caps)
+                except RuntimeError:
+                    # predicted selection overflows the banks — the real one
+                    # may not (or will raise on the sync path with context)
+                    return {"idx": idx, "failed": True}
+                staged = ma.prefetch_admissions(plans, store, self.staging)
+                new_store = ma.writeback_evictions(plans, banks, store)
+                return {"idx": idx, "failed": False, "plans": plans,
+                        "staged": staged, "store": new_store}
 
         if self.inline:
             self._pending = job()
@@ -203,6 +239,14 @@ class SwapPlanner:
             return dict(banks), np.array(slot_map, np.int32), dict(store)
         self.stats.boundaries += 1
         self.stats.sync_swaps += 1
+        if job is not None:
+            # a dispatch was in flight but missed (or overflowed): count it
+            # where latency diagnosis looks first
+            self._c_mispredicts.inc()
+            obs.instant("swap_mispredict",
+                        {"predicted": job["idx"].tolist(),
+                         "actual": idx.tolist()} if not job["failed"]
+                        else {"failed_plan": True})
         staged = ma.prefetch_admissions(plans, store, self.staging)
         store = ma.writeback_evictions(plans, banks, store)
         return ma.commit_swap(plans, banks, store, slot_map, staged,

@@ -5,18 +5,21 @@
 
 Reports compile time (warmup call) and steady-state tok/s separately — the
 pre-warmup number was dominated by XLA compile and meaningless as a
-throughput figure. The warmup report also surfaces the compiled-fn cache
-counters (hits/misses/evictions/size): a steady-state call that adds misses
-means a closure was rebuilt (and recompiled) when it should have been
-cached. With ``--kv-layout paged`` the page-pool stats (live/high-water
-pages, utilization) are printed too. ``--prefix-cache`` turns on the radix
-prefix cache (and makes the demo batch share a prompt prefix so hits are
-observable); ``--preempt`` allows the engine to preempt-and-requeue
-residents when the pool is exhausted.
+throughput figure. After the timed pass the launcher prints the engine's
+consolidated ``stats_snapshot()`` — engine counters, per-request latency
+histograms (queue-wait / TTFT / TPOT / e2e), page-pool + scheduler +
+prefix-cache + fn-cache state in one nested dict (keys documented in
+serve/engine.py). ``--prefix-cache`` turns on the radix prefix cache (and
+makes the demo batch share a prompt prefix so hits are observable);
+``--preempt`` allows the engine to preempt-and-requeue residents when the
+pool is exhausted. ``--trace out.json`` exports a Perfetto-loadable trace
+with per-request ttft/e2e lanes; ``--metrics-json`` dumps the obs registry
+snapshot.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -59,7 +62,19 @@ def main():
     ap.add_argument("--fn-cache-limit", type=int, default=0,
                     help="bound the compiled-fn LRU (0 = keep default)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default="",
+                    help="export a Chrome trace-event JSON (ui.perfetto.dev)"
+                         " with admission/prefill/decode spans and "
+                         "per-request ttft/e2e lanes")
+    ap.add_argument("--metrics-json", default="",
+                    help="write the obs registry snapshot to this path")
     args = ap.parse_args()
+
+    from repro import obs
+
+    obs_on = bool(args.trace or args.metrics_json)
+    if obs_on:
+        obs.enable(selection=False)
 
     from repro.configs import get_config, get_smoke_config
     from repro.models import registry
@@ -128,18 +143,11 @@ def main():
     steady = fn_cache_info()
     tps = args.batch * args.new_tokens / dt
     print(f"compile+first-call: {t_compile:.2f}s")
-    print(f"  fn-cache after warmup: {warm['misses']} misses "
-          f"{warm['hits']} hits, {warm['size']}/{warm['limit']} entries, "
-          f"{warm['evictions']} evictions")
     print(f"steady state: generated {out.shape} in {dt:.2f}s ({tps:.1f} tok/s)")
-    print(f"  fn-cache after steady: {steady['misses']} misses "
-          f"(+{steady['misses'] - warm['misses']} new) {steady['hits']} hits")
-    pool = engine.page_pool_stats()
-    if pool is not None:
-        print(f"  page pool: high water {pool['high_water_pages']}/"
-              f"{pool['num_pages']} pages "
-              f"({pool['high_water_pages'] / pool['num_pages']:.0%} peak "
-              f"utilization), cache {engine.kv_cache_bytes() / 1e6:.2f} MB")
+    if steady["misses"] > warm["misses"]:
+        print(f"  WARNING: steady-state call added "
+              f"{steady['misses'] - warm['misses']} fn-cache misses "
+              f"(a closure was rebuilt instead of cached)")
     if args.prefix_cache:
         # second wave on the SAME engine: the first wave populated the
         # radix tree, so every re-sent prompt aliases its cached pages and
@@ -152,16 +160,21 @@ def main():
         print(f"  2nd wave (warm radix tree): "
               f"{args.batch * args.new_tokens / dt2:.1f} tok/s "
               f"({dt / max(dt2, 1e-9):.2f}x 1st wave)")
-        print(f"  prefix cache: {engine.stats['prefix_hits']} hits, "
-              f"{engine.stats['prefix_pages_shared']} pages shared, "
-              f"{engine.stats['prefill_tokens']} tokens prefilled")
-    if args.preempt:
-        print(f"  preempted: {engine.stats['preempted']} "
-              f"(backpressure {engine.stats['backpressure']})")
     if store is not None:
-        print(f"  prefix store: {store.stats['adoptions']} adoptions, "
-              f"cross-engine hits {engine.stats['prefix_hits']}, "
-              f"suffix-only prefill {engine.stats['prefill_tokens']} tokens")
+        print(f"  prefix store: {store.stats['adoptions']} adoptions")
+    # one consolidated dump replaces the old fn-cache / page-pool / prefix
+    # printouts — key structure documented in serve/engine.py
+    print("engine stats_snapshot:")
+    print(json.dumps(engine.stats_snapshot(), indent=2))
+    if args.trace:
+        obs.export_trace(args.trace)
+        print(f"trace written to {args.trace} (open in ui.perfetto.dev)")
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as f:
+            json.dump(obs.snapshot(), f, indent=2)
+        print(f"metrics snapshot written to {args.metrics_json}")
+    if obs_on:
+        obs.disable()
     print("first row:", out[0][:24])
     return 0
 

@@ -10,6 +10,11 @@ Production (TPU pod; same code, mesh from --mesh):
 
 --method accepts any entry in the repro.methods registry (full,
 adagradselect, topk_grad, random, lora, lisa, grass, ...).
+
+Observability: ``--trace run.json`` exports a Perfetto-loadable Chrome
+trace of the run, ``--metrics-json m.json`` dumps the metrics-registry
+snapshot (inspect with ``python -m repro.launch.inspect m.json``), and
+``--report`` prints the selection-frequency heatmap after training.
 """
 from __future__ import annotations
 
@@ -86,7 +91,28 @@ def main():
     ap.add_argument("--eval-every", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="")
+    ap.add_argument("--trace", default="",
+                    help="export a Chrome trace-event JSON (load in "
+                         "ui.perfetto.dev) of the run: train_step spans, "
+                         "banked phase_a/swap/phase_b, the background "
+                         "swap-dispatch thread on its own track. Enables "
+                         "the obs layer (adds host syncs; trajectories "
+                         "stay bit-identical)")
+    ap.add_argument("--metrics-json", default="",
+                    help="write the full obs registry snapshot (counters/"
+                         "gauges/histogram summaries + selection "
+                         "telemetry) to this path; feed it to "
+                         "repro.launch.inspect")
+    ap.add_argument("--report", action="store_true",
+                    help="print the selection-frequency heatmap "
+                         "(exploration->exploitation view) after training")
     args = ap.parse_args()
+
+    from repro import obs
+
+    obs_on = bool(args.trace or args.metrics_json or args.report)
+    if obs_on:
+        obs.enable()
 
     from repro.configs import get_config, get_smoke_config
     from repro.configs.base import OptimizerConfig, SelectConfig, TrainConfig
@@ -158,6 +184,18 @@ def main():
         with open(args.out, "w") as f:
             json.dump({"losses": log.losses, "step_times": log.step_times,
                        "metrics": log.metrics}, f)
+    if args.trace:
+        obs.export_trace(args.trace)
+        print(f"trace written to {args.trace} (open in ui.perfetto.dev)")
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as f:
+            json.dump(obs.snapshot(), f, indent=2)
+        print(f"metrics snapshot written to {args.metrics_json}")
+    if args.report:
+        from repro.obs import report as obs_report
+        print(obs_report.render_selection_trace(obs.selection_trace()))
+    if obs_on:
+        obs.disable()
     return 0
 
 

@@ -36,12 +36,12 @@ lax.cond-gated away (DESIGN 3.3); the observed norms are then fed back via
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import (ModelConfig, OptimizerConfig, SelectConfig,
                                 TrainConfig)
 from repro.core import (adagradselect, masked_adamw, offload,
@@ -301,36 +301,37 @@ class SelectionMethod:
         stats = planner.stats
 
         def step_fn(state, batch):
-            t0 = time.perf_counter()
-            grads, mask, sel_state, loss, metrics, gnorm, block_norms = fwd(
-                state["params"], state["sel"], batch)
-            # selection-change boundary: stream moments store<->banks. The
-            # policy's static-shape [k] indices vector is the one host sync
-            # the paper's design pays (k ids, not a [num_blocks] mask).
-            idx = np.asarray(sel_state["indices"])
-            t1 = time.perf_counter()
+            # phase timing goes through obs.timed — one measurement feeds
+            # both the SwapStats histograms (the bench JSON fields are views
+            # over them) and, when tracing is on, the phase_a/swap/phase_b
+            # spans of the Perfetto timeline
+            with obs.timed(stats.phase_a, "phase_a"):
+                grads, mask, sel_state, loss, metrics, gnorm, block_norms = \
+                    fwd(state["params"], state["sel"], batch)
+                # selection-change boundary: stream moments store<->banks.
+                # The policy's static-shape [k] indices vector is the one
+                # host sync the paper's design pays (k ids, not a
+                # [num_blocks] mask).
+                idx = np.asarray(sel_state["indices"])
             opt = state["opt"]
-            store = offload.ensure_store_residency(opt["store"],
-                                                   opt_cfg.offload,
-                                                   shardings=store_sh)
-            # joins any in-flight dispatch; a prediction hit leaves only the
-            # commit (a few async scatters) on the critical path, a miss
-            # falls back to the synchronous swap (counted in stats)
-            banks, slot_map, store = planner.resolve(
-                idx, opt["banks"], store, opt["slot_map"])
-            t2 = time.perf_counter()
-            params, banks, counts, lr = apply(
-                state["params"], grads, banks, opt["counts"], mask,
-                state["step"])
-            # phase B is in flight: predict step t+1's selection and stage
-            # its boundary in the background (device reads inside the job
-            # block on apply's outputs there, not here)
-            planner.dispatch(sel_state, banks, store, slot_map)
-            t3 = time.perf_counter()
+            with obs.timed(stats.swap, "swap"):
+                store = offload.ensure_store_residency(opt["store"],
+                                                       opt_cfg.offload,
+                                                       shardings=store_sh)
+                # joins any in-flight dispatch; a prediction hit leaves only
+                # the commit (a few async scatters) on the critical path, a
+                # miss falls back to the synchronous swap (counted in stats)
+                banks, slot_map, store = planner.resolve(
+                    idx, opt["banks"], store, opt["slot_map"])
+            with obs.timed(stats.phase_b, "phase_b"):
+                params, banks, counts, lr = apply(
+                    state["params"], grads, banks, opt["counts"], mask,
+                    state["step"])
+                # phase B is in flight: predict step t+1's selection and
+                # stage its boundary in the background (device reads inside
+                # the job block on apply's outputs there, not here)
+                planner.dispatch(sel_state, banks, store, slot_map)
             stats.steps += 1
-            stats.phase_a_us += (t1 - t0) * 1e6
-            stats.swap_us += (t2 - t1) * 1e6
-            stats.phase_b_us += (t3 - t2) * 1e6
             new_state = {"params": params,
                          "opt": {"banks": banks, "slot_map": slot_map,
                                  "counts": counts, "store": store},

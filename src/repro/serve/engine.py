@@ -70,6 +70,34 @@ server-level ``PrefixStore`` (serve/prefix_store.py) carries the radix
 tree + page pool across engine instances (``close()`` hands them over; the
 next engine over the same params adopts them warm).
 
+Observability: the engine records into the process-global obs registry
+(``repro.obs``) — per-request queue-wait/TTFT/time-per-output-token/e2e
+latency histograms (wall-clock, stamped at submit/admission/completion),
+page-pool and fn-cache gauges — and, when ``obs.enable()`` tracing is on,
+emits admission/prefill/decode spans plus one retroactive ``e2e``+``ttft``
+span lane per request in the exported Perfetto trace.
+``stats_snapshot()`` consolidates every stat surface into one nested dict:
+
+- ``engine`` — the per-engine counters (``self.stats``): ``decode_chunks``
+  (jitted chunk dispatches), ``decode_steps`` (ACTUAL emitted decode
+  positions, including a terminal EOS — not ``chunks * decode_chunk``),
+  ``prefills``/``prefill_chunks``/``prefill_tokens``, ``admitted``/
+  ``completed``, ``backpressure``/``preempted``, ``prefix_hits``/
+  ``prefix_pages_shared``.
+- ``latency_us`` — ``queue_wait``/``ttft``/``tpot``/``e2e`` histogram
+  summaries (count, mean, min/max, p50/p95/p99), microseconds.
+- ``pages`` — ``PageAllocator.stats()`` (num/live/free/peak pages,
+  utilization); None for the dense layout.
+- ``scheduler`` — ``pending`` queue depth + the admission policy's
+  counters (``bypass_admissions``/``bypassed``/``aging_forced`` for
+  ``prefix_aware``; None for plain FCFS).
+- ``prefix_cache`` — radix-tree ``pages``/``capacity_pages``; None when
+  the prefix cache is off.
+- ``stream_out`` — background detokenize queue ``pending``; None when no
+  stream-out worker runs.
+- ``fn_cache`` — the process-wide compiled-fn cache counters
+  (``fn_cache_info()``).
+
 Used by the examples, the synthetic-math evaluator (the GSM8K-protocol
 proxy: zero-shot greedy decoding, temperature 0), the serve launcher, and
 ``benchmarks/bench_serve.py``. The pre-engine static-batch loop lives in
@@ -78,6 +106,7 @@ signature and reproduces the legacy outputs exactly.
 """
 from __future__ import annotations
 
+import time
 import warnings
 from collections import OrderedDict
 
@@ -86,6 +115,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.models import registry
 from repro.serve.config import ServeConfig
@@ -406,10 +436,34 @@ class ServeEngine:
         self._job: dict | None = None             # in-flight chunked prefill
         self._closed = False
         self.clock = 0                            # admission step counter
+        # decode_steps counts ACTUAL emitted decode positions (tokens the
+        # host consumed, including a terminal EOS) — not chunk * decode_chunk
+        # — so goodput math downstream reads real work, not dispatch grain
         self.stats = {"decode_chunks": 0, "decode_steps": 0, "prefills": 0,
                       "prefill_chunks": 0, "admitted": 0, "completed": 0,
                       "backpressure": 0, "preempted": 0, "prefix_hits": 0,
                       "prefix_pages_shared": 0, "prefill_tokens": 0}
+
+        # per-request wall-clock latency (always-on: perf_counter stamps +
+        # bounded histograms, no device syncs). Keyed by uid; stamps survive
+        # preemption so TTFT/e2e span the request's real lifetime.
+        self._req_ns: dict[int, dict] = {}
+        # per-ENGINE histograms (stats_snapshot() reports this instance, not
+        # every engine the process ever ran), registered last-engine-wins
+        # into the global registry — the SwapStats idiom
+        self._h_queue_wait = obs.Histogram()
+        self._h_ttft = obs.Histogram()
+        self._h_tpot = obs.Histogram()
+        self._h_e2e = obs.Histogram()
+        for nm, h in (("queue_wait_us", self._h_queue_wait),
+                      ("ttft_us", self._h_ttft), ("tpot_us", self._h_tpot),
+                      ("e2e_us", self._h_e2e)):
+            obs.metrics.register(nm, h, subsystem="serve")
+        self._g_pages = obs.metrics.gauge("page_pool_live", subsystem="serve")
+        self._g_fn_cache = obs.metrics.gauge("fn_cache_size",
+                                             subsystem="serve")
+        obs.metrics.register("engine", lambda: dict(self.stats),
+                             subsystem="serve")
 
     # ---------------------------------------------------- compiled closures
 
@@ -654,6 +708,9 @@ class ServeEngine:
                     f"({need} positions / page_size {self.page_size}) but "
                     f"the pool has {self._alloc.num_pages}; grow num_pages "
                     f"— waiting cannot free enough")
+        # first submit stamps the latency clock; a preempted request
+        # re-entering through push_front keeps its original stamps
+        self._req_ns.setdefault(req.uid, {"submit": time.perf_counter_ns()})
         self.scheduler.submit(req)
 
     def _free_slots(self) -> list[int]:
@@ -706,6 +763,40 @@ class ServeEngine:
         """Allocator stats for the paged layout (None for dense/no-op)."""
         return self._alloc.stats() if self._alloc is not None else None
 
+    def stats_snapshot(self) -> dict:
+        """One nested dict consolidating every serving stat surface (the
+        launcher/examples print this instead of separate stat blocks; keys
+        documented in the module docstring):
+
+        - ``engine``: the per-engine counter dict (``self.stats``)
+        - ``latency_us``: queue-wait / TTFT / time-per-output-token / e2e
+          histogram summaries (count, mean, p50/p95/p99)
+        - ``pages``: ``PageAllocator.stats()`` (None for dense layout)
+        - ``scheduler``: queue depth + admission-policy counters
+        - ``prefix_cache``: radix-tree occupancy (None when disabled)
+        - ``stream_out``: background detokenize queue depth (None when off)
+        - ``fn_cache``: the process-wide compiled-fn cache counters
+        """
+        return {
+            "engine": dict(self.stats),
+            "latency_us": {"queue_wait": self._h_queue_wait.summary(),
+                           "ttft": self._h_ttft.summary(),
+                           "tpot": self._h_tpot.summary(),
+                           "e2e": self._h_e2e.summary()},
+            "pages": self.page_pool_stats(),
+            "scheduler": {
+                "pending": int(self.scheduler.pending),
+                "admission": (dict(self.admission_policy.stats)
+                              if self.admission_policy is not None else None),
+            },
+            "prefix_cache": ({"pages": len(self._prefix),
+                              "capacity_pages": self._prefix.capacity}
+                             if self._prefix is not None else None),
+            "stream_out": ({"pending": self._stream.pending}
+                           if self._stream is not None else None),
+            "fn_cache": fn_cache_info(),
+        }
+
     def _insert_prefix_pages(self, slot: int, tokens, covered: int) -> None:
         """Insert ``slot``'s pages for the fully-written full-page prefix of
         ``tokens`` (``covered`` positions hold valid KV) into the radix
@@ -733,6 +824,23 @@ class ServeEngine:
             done_step=int(self.clock),
             prefix_pages=int(meta.get("prefix_pages", 0)))
         completed.append(comp)
+        rt = self._req_ns.pop(req.uid, None)
+        if rt is not None:
+            now_ns = time.perf_counter_ns()
+            self._h_e2e.record((now_ns - rt["submit"]) / 1e3)
+            first = rt.get("first", now_ns)
+            self._h_tpot.record((now_ns - first) / 1e3
+                                / max(1, len(toks) - 1))
+            tr = obs.tracer()
+            if tr is not None:
+                # retroactive per-request spans, one timeline lane per uid:
+                # e2e (submit -> done) with the ttft head (submit -> first)
+                track = f"request {req.uid}"
+                tr.complete("e2e", rt["submit"], now_ns, track=track,
+                            args={"uid": req.uid, "tokens": len(toks),
+                                  "finish": comp.finish_reason})
+                tr.complete("ttft", rt["submit"], first, track=track,
+                            args={"uid": req.uid})
         if self._alloc is not None:
             if self._prefix is not None:
                 self._insert_prefix_pages(slot, req.tokens, req.prompt_len)
@@ -749,6 +857,7 @@ class ServeEngine:
     def _post_admit(self, group, slot_ids, tok0, completed) -> None:
         tok0 = np.asarray(tok0)[:len(group)]
         self.stats["admitted"] += len(group)
+        now_ns = time.perf_counter_ns()
         for req, slot, t in zip(group, slot_ids, tok0):
             self._slot_req[slot] = req
             self._no_preempt.add(slot)  # just admitted: no KV written yet
@@ -756,6 +865,14 @@ class ServeEngine:
             # keeps its original (its first token really was sampled then)
             self._meta.setdefault(req.uid, {"first_step": self.clock,
                                             "prefix_pages": 0})
+            # first admission also samples the first token, so it stamps
+            # both queue-wait and TTFT (re-admission keeps the originals)
+            rt = self._req_ns.setdefault(req.uid, {"submit": now_ns})
+            if "first" not in rt:
+                rt["first"] = now_ns
+                admit = rt.setdefault("admit", now_ns)
+                self._h_queue_wait.record((admit - rt["submit"]) / 1e3)
+                self._h_ttft.record((now_ns - rt["submit"]) / 1e3)
             res = self._resume.pop(req.uid, None)
             if res is not None:
                 self._out[req.uid] = res["emitted"] + [int(t)]
@@ -1060,6 +1177,13 @@ class ServeEngine:
             self._post_admit(sub, sids, tok0, completed)
 
     def _start_job(self, group, slot_ids) -> None:
+        # chunked prefill: admission starts now, the first token lands when
+        # the job finalizes steps later — stamp queue-wait's endpoint here
+        now_ns = time.perf_counter_ns()
+        for r in group:
+            self._req_ns.setdefault(r.uid,
+                                    {"submit": now_ns}).setdefault("admit",
+                                                                   now_ns)
         bucket, tokens, lengths, slots = self._bucket_batch(
             group, slot_ids, self.num_slots)
         scratch = self.model.init_cache(self.cfg, self.num_slots, bucket)
@@ -1148,17 +1272,20 @@ class ServeEngine:
         completed: list[Completion] = []
         self._no_preempt.clear()  # last step's admits have their KV by now
         if self._job is not None:
-            self._job_step(completed)
-        self._admission(completed)
+            with obs.span("prefill_chunk"):
+                self._job_step(completed)
+        with obs.span("admission"):
+            self._admission(completed)
 
         if self.num_active:
-            fn = self._chunk_fn()
-            self.cache, self.last_tok, self.finished, self.keys, toks = fn(
-                self.params, self.cache, self.last_tok, self.finished,
-                self.keys)
-            self.stats["decode_chunks"] += 1
-            self.stats["decode_steps"] += self.decode_chunk
-            toks = np.asarray(toks)  # [num_slots, chunk] — the host sync
+            with obs.span("decode_chunk"):
+                fn = self._chunk_fn()
+                self.cache, self.last_tok, self.finished, self.keys, toks = \
+                    fn(self.params, self.cache, self.last_tok, self.finished,
+                       self.keys)
+                self.stats["decode_chunks"] += 1
+                toks = np.asarray(toks)  # [num_slots, chunk] — the host sync
+            emitted = 0
             for slot in range(self.num_slots):
                 req = self._slot_req[slot]
                 if req is None:
@@ -1166,10 +1293,18 @@ class ServeEngine:
                 for t in toks[slot]:
                     self._out[req.uid].append(int(t))
                     self._left[req.uid] -= 1
+                    emitted += 1
                     if ((self.eos_id is not None and int(t) == self.eos_id)
                             or self._left[req.uid] == 0):
                         self._complete(slot, completed)
                         break
+            # actual emitted positions, not chunk-granular dispatch width:
+            # slots that finish mid-chunk (or decode pad into idle slots)
+            # don't inflate the count
+            self.stats["decode_steps"] += emitted
+        if self._alloc is not None:
+            self._g_pages.set(self._alloc.stats()["live_pages"])
+        self._g_fn_cache.set(len(_FN_CACHE))
         self.clock += 1
         return completed
 

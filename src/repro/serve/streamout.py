@@ -20,6 +20,8 @@ import threading
 
 import numpy as np
 
+from repro import obs
+
 _STOP = object()
 
 
@@ -36,6 +38,9 @@ class StreamOut:
         self._q: queue.Queue = queue.Queue()
         self._results: dict[int, np.ndarray] = {}
         self._error: BaseException | None = None
+        # incremented from the worker thread — thread-safe by contract
+        self._c_streamed = obs.metrics.counter("streamed_completions",
+                                               subsystem="serve")
         self._thread = threading.Thread(
             target=self._worker, name="serve-streamout", daemon=True)
         self._thread.start()
@@ -55,9 +60,11 @@ class StreamOut:
             try:
                 if item is _STOP:
                     return
-                self._results[item.uid] = item.tokens
-                if self._callback is not None:
-                    self._callback(item)
+                with obs.span("streamout_callback"):
+                    self._results[item.uid] = item.tokens
+                    if self._callback is not None:
+                        self._callback(item)
+                self._c_streamed.inc()
             except BaseException as e:  # noqa: BLE001 — surfaced via drain()
                 if self._error is None:
                     self._error = e

@@ -45,7 +45,7 @@ from dataclasses import dataclass, field
 import jax
 import numpy as np
 
-from repro import methods
+from repro import methods, obs
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs.base import TrainConfig
 from repro.data import loader as data_loader
@@ -123,6 +123,15 @@ class Trainer:
         self._ewma = None
         self._data_cursor = None  # cursor AFTER the last consumed batch
 
+        # always-on registry instruments (host-side, sub-µs; the tracing/
+        # selection-telemetry syncs below are gated on obs.enabled())
+        self._m_steps = obs.metrics.counter("steps", subsystem="train")
+        self._m_step_time = obs.metrics.histogram("step_time_us",
+                                                  subsystem="train")
+        self._m_stragglers = obs.metrics.counter("stragglers",
+                                                 subsystem="train")
+        self._m_loss = obs.metrics.gauge("last_loss", subsystem="train")
+
     # ------------------------------------------------------------- resume
     def maybe_restore(self) -> int:
         if self.ckpt is None or self.ckpt.latest_step() is None:
@@ -191,17 +200,31 @@ class Trainer:
         return self.log
 
     def _train_loop(self, tcfg, fetch, step0, steps, last, pending, t0):
+        sel_trace = obs.selection_trace()
         for step in range(step0, step0 + steps):
             batch, self._data_cursor = next(fetch)
             if not pending:
                 t0 = time.perf_counter()
-            self.state, metrics = self.step_fn(self.state, batch)
+            with obs.span("train_step", {"step": step} if obs.enabled()
+                          else None):
+                self.state, metrics = self.step_fn(self.state, batch)
             pending.append((step, metrics["loss"]))
+
+            # selection telemetry (obs-enabled only: pulling the mask off
+            # the device is a host sync the disabled contract forbids). The
+            # recorded mask is the one this step's update applied, so the
+            # accumulated counts reproduce state["opt"]["counts"] exactly.
+            if sel_trace is not None and metrics.get("mask") is not None:
+                sel_trace.record(step, np.asarray(metrics["mask"]),
+                                 np.asarray(metrics["block_norms"])
+                                 if metrics.get("block_norms") is not None
+                                 else None)
 
             at_log = tcfg.log_every and step % tcfg.log_every == 0
             if (at_log or step == last or not tcfg.log_every
                     or self._watchdog_active):
-                jax.block_until_ready(metrics["loss"])
+                with obs.span("log_sync"):
+                    jax.block_until_ready(metrics["loss"])
                 dt = (time.perf_counter() - t0) / len(pending)
                 # steps/losses/step_times extend together at the boundary so
                 # the lists never misalign if the loop exits mid-window
@@ -209,6 +232,9 @@ class Trainer:
                 self.log.losses.extend(float(np.asarray(x))
                                        for _, x in pending)
                 self.log.step_times.extend([dt] * len(pending))
+                self._m_steps.inc(len(pending))
+                self._m_step_time.record(dt * 1e6)
+                self._m_loss.set(self.log.losses[-1])
                 pending = []
 
                 # straggler watchdog (EWMA of step time, warmup-excluded)
@@ -216,6 +242,10 @@ class Trainer:
                     self._ewma = dt if self._ewma is None else \
                         0.9 * self._ewma + 0.1 * dt
                     if self._ewma and dt > tcfg.straggler_tau * self._ewma:
+                        self._m_stragglers.inc()
+                        obs.instant("straggler",
+                                    {"step": step, "dt_s": dt,
+                                     "ewma_s": self._ewma})
                         self.on_straggler(step, dt, self._ewma)
 
             if at_log:
